@@ -1,0 +1,73 @@
+"""Paper §1 study: fraction of PUD ops executable per allocator x size.
+
+Reproduces the motivation numbers: malloc/posix_memalign -> 0 %, huge pages
+-> partial ("up to 60 %"), PUMA -> ~100 %.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core import pud
+from repro.core.allocators import (
+    HugePageModel,
+    MallocModel,
+    PhysicalMemory,
+    PosixMemalignModel,
+)
+from repro.core.dram import AddressMap
+from repro.core.puma import PumaAllocator
+
+SIZES_BITS = [2_000, 8_000, 32_000, 128_000, 512_000, 2_000_000, 6_000_000]
+OPS = {"zero": 1, "copy": 2, "aand": 3}
+REPS = 10
+
+
+def _fraction(amap, mk_alloc, op: str, nops: int, size: int) -> float:
+    fr = []
+    for rep in range(REPS):
+        mem = PhysicalMemory(amap, seed=rep)
+        al = mk_alloc(mem)
+        ops = [al.alloc(size) for _ in range(nops)]
+        fr.append(pud.plan_rows(op.replace("aand", "and"), ops, amap).pud_fraction)
+    return float(np.mean(fr))
+
+
+def _fraction_puma(amap, op: str, nops: int, size: int) -> float:
+    fr = []
+    for rep in range(REPS):
+        mem = PhysicalMemory(amap, seed=rep)
+        pa = PumaAllocator(mem)
+        pa.pim_preallocate(64)
+        ops = [pa.pim_alloc(size)]
+        while len(ops) < nops:
+            ops.append(pa.pim_alloc_align(size, ops[0]))
+        fr.append(pud.plan_rows(op.replace("aand", "and"), ops, amap).pud_fraction)
+    return float(np.mean(fr))
+
+
+def run(emit: Callable[[str, float, float], None]) -> Dict:
+    amap = AddressMap()
+    allocators = {
+        "malloc": lambda m: MallocModel(m),
+        "posix_memalign": lambda m: PosixMemalignModel(m),
+        "hugepage": lambda m: HugePageModel(m, "mmap"),
+    }
+    table: Dict[str, Dict[int, float]] = {}
+    for op, nops in OPS.items():
+        for name, mk in allocators.items():
+            for bits in SIZES_BITS:
+                t0 = time.perf_counter()
+                f = _fraction(amap, mk, op, nops, max(1, bits // 8))
+                us = (time.perf_counter() - t0) * 1e6 / REPS
+                emit(f"alloc_fraction/{op}/{name}/{bits}b", us, f)
+                table.setdefault(f"{op}/{name}", {})[bits] = f
+        for bits in SIZES_BITS:
+            t0 = time.perf_counter()
+            f = _fraction_puma(amap, op, nops, max(1, bits // 8))
+            us = (time.perf_counter() - t0) * 1e6 / REPS
+            emit(f"alloc_fraction/{op}/puma/{bits}b", us, f)
+            table.setdefault(f"{op}/puma", {})[bits] = f
+    return table

@@ -1,0 +1,43 @@
+"""TPU adaptation study: KV-pool placement policy vs block-table contiguity
+(the '% executable in PUD' analogue) under serving churn, plus the modeled
+DMA-descriptor reduction."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import numpy as np
+
+from repro.core.kv_pool import KVPoolConfig, PagedKVPool
+
+
+def _churn(policy: str, steps: int = 400, seed: int = 0) -> Dict[str, float]:
+    cfg = KVPoolConfig(
+        num_blocks=1024, blocks_per_arena=64, max_seqs=64, policy=policy
+    )
+    p = PagedKVPool(cfg)
+    rng = np.random.default_rng(seed)
+    live = []
+    for _ in range(steps):
+        if live and rng.random() < 0.45:
+            p.release(live.pop(rng.integers(len(live))))
+        s = p.admit(int(rng.integers(16, 192)))
+        if s is not None:
+            live.append(s)
+        for s in live:
+            p.append_token(s)
+    return p.contiguity_report()
+
+
+def run(emit: Callable[[str, float, float], None]) -> Dict:
+    out = {}
+    for policy in ["puma", "first_fit", "random"]:
+        t0 = time.perf_counter()
+        reps = [_churn(policy, seed=s) for s in range(3)]
+        us = (time.perf_counter() - t0) * 1e6 / 3
+        frac = float(np.mean([r["mean_contiguous_fraction"] for r in reps]))
+        desc = float(np.mean([r["descriptors_per_tile"] for r in reps]))
+        emit(f"kv_pool/contiguity/{policy}", us, round(frac, 4))
+        emit(f"kv_pool/descriptors_per_tile/{policy}", us, round(desc, 4))
+        out[policy] = {"contiguity": frac, "descriptors_per_tile": desc}
+    return out

@@ -1,0 +1,43 @@
+"""Paper Figure 2: *-zero / *-copy / *-aand speedup vs the malloc baseline,
+allocation sizes 2 Kb .. 6 Mb, normalized exactly as the paper does."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+from repro.core import pud
+from repro.core.allocators import MallocModel, PhysicalMemory
+from repro.core.dram import AddressMap
+from repro.core.puma import PumaAllocator
+
+SIZES_BITS = [2_000, 8_000, 32_000, 128_000, 512_000, 2_000_000, 6_000_000]
+OPS = {"zero": 1, "copy": 2, "aand": 3}
+
+
+def run(emit: Callable[[str, float, float], None]) -> Dict:
+    amap = AddressMap()
+    model = pud.PudCostModel()
+    table: Dict[str, Dict[int, float]] = {}
+    for op, nops in OPS.items():
+        real_op = op.replace("aand", "and")
+        for bits in SIZES_BITS:
+            size = max(1, bits // 8)
+            t0 = time.perf_counter()
+            mem = PhysicalMemory(amap, seed=0)
+            pa = PumaAllocator(mem)
+            pa.pim_preallocate(64)
+            ops = [pa.pim_alloc(size)]
+            while len(ops) < nops:
+                ops.append(pa.pim_alloc_align(size, ops[0]))
+            r_puma = pud.simulate_op(real_op, ops, amap, model)
+
+            mem2 = PhysicalMemory(amap, seed=0)
+            mal = MallocModel(mem2)
+            r_mal = pud.simulate_op(
+                real_op, [mal.alloc(size) for _ in range(nops)], amap, model
+            )
+            us = (time.perf_counter() - t0) * 1e6
+            speedup = r_mal.t_ns / r_puma.t_ns
+            emit(f"fig2/{op}/{bits}b", us, round(speedup, 3))
+            table.setdefault(op, {})[bits] = speedup
+    return table

@@ -1,0 +1,30 @@
+"""Roofline table from experiments/*.json (computed by launch/roofline.py):
+per (arch x shape), the three terms, dominant bottleneck, useful-FLOPs ratio
+and roofline fraction."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable, Dict
+
+
+def run(emit: Callable[[str, float, float], None]) -> Dict:
+    out = {}
+    for tag, path in [
+        ("roofline", "experiments/roofline_results.json"),
+        ("roofline_final", "experiments/roofline_final_decode.json"),
+    ]:
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            res = json.load(f)
+        for key, rec in sorted(res.items()):
+            if rec.get("compute_s") is None:
+                continue
+            step_us = max(rec["compute_s"], rec["memory_s"], rec["collective_s"]) * 1e6
+            emit(f"{tag}/{rec['arch']}/{rec['shape']}", round(step_us, 1),
+                 round(rec["roofline_fraction"], 4))
+            out[f"{tag}|{key}"] = rec["roofline_fraction"]
+    if not out:
+        emit("roofline/missing", 0.0, 0.0)
+    return out

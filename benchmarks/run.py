@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  * alloc_fraction  — paper §1 motivation (PUD-executable fraction)
+  * microbench      — paper Figure 2 (zero/copy/aand speedups vs malloc)
+  * kv_pool_bench   — TPU adaptation (block-table contiguity per policy)
+  * kernel_bench    — kernel reference-path timings + agreement
+  * roofline_report — §Roofline table (requires launch/roofline.py output)
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        alloc_fraction,
+        kernel_bench,
+        kv_pool_bench,
+        microbench,
+        roofline_report,
+    )
+
+    print("name,us_per_call,derived")
+
+    def emit(name: str, us: float, derived) -> None:
+        print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+
+    alloc_fraction.run(emit)
+    microbench.run(emit)
+    kv_pool_bench.run(emit)
+    kernel_bench.run(emit)
+    roofline_report.run(emit)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Quickstart: the paper in ~60 lines.
+
+Reproduces PUMA's core result on the modeled 8 GB DDR system: standard
+allocators can't feed a processing-using-DRAM substrate; PUMA's
+subarray-aware worst-fit + hint-aligned allocation can.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import (
+    AddressMap,
+    HugePageModel,
+    MallocModel,
+    PhysicalMemory,
+    PumaAllocator,
+    plan_rows,
+    simulate_op,
+)
+
+AMAP = AddressMap()          # paper geometry: 8 GB, 1 MB subarrays
+SIZE = 128_000 // 8          # a 128 Kb operand
+
+
+def show(name, operands):
+    plan = plan_rows("and", operands, AMAP)
+    sim = simulate_op("and", operands, AMAP)
+    print(
+        f"  {name:14s} PUD-executable rows: {plan.pud_fraction:6.1%}   "
+        f"simulated time: {sim.t_ns/1e3:8.1f} us   "
+        f"(CPU-only would be {sim.t_cpu_ns/1e3:8.1f} us)"
+    )
+
+
+print("C[i] = A[i] AND B[i]  on the Ambit/RowClone substrate")
+print(f"operand size: {SIZE} bytes;  DRAM: {AMAP.total_bytes//2**30} GiB, "
+      f"{AMAP.region_bytes} B regions\n")
+
+# 1) malloc: virtually contiguous, physically scattered -> 0 % in PUD
+mem = PhysicalMemory(AMAP, seed=0)
+malloc = MallocModel(mem)
+show("malloc", [malloc.alloc(SIZE) for _ in range(3)])
+
+# 2) huge pages: physically contiguous but subarray placement is luck
+huge = HugePageModel(mem)
+show("huge pages", [huge.alloc(SIZE) for _ in range(3)])
+
+# 3) PUMA: pre-allocate a pool, worst-fit the first operand, align the rest
+puma = PumaAllocator(mem)
+puma.pim_preallocate(64)                  # pim_preallocate: 64 huge pages
+A = puma.pim_alloc(SIZE)                  # pim_alloc: worst-fit
+B = puma.pim_alloc_align(SIZE, A)         # pim_alloc_align: same subarrays
+C = puma.pim_alloc_align(SIZE, A)
+show("PUMA", [A, B, C])
+
+print("\nPUMA stats:", puma.stats)

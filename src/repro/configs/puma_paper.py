@@ -1,0 +1,5 @@
+"""The paper's own evaluated substrate: Ambit/RowClone PUD over an 8 GB
+DDR system — not an LM; selected by the PUD micro-benchmarks."""
+from repro.core.dram import DramGeometry
+
+CONFIG = DramGeometry()

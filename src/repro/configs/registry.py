@@ -1,0 +1,42 @@
+"""Architecture registry: ``get_config(name)`` / ``ARCHS`` (all assigned)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig, RunShape, SHAPES
+
+ARCHS: List[str] = [
+    "granite_moe_3b_a800m",
+    "granite_moe_1b_a400m",
+    "zamba2_7b",
+    "seamless_m4t_medium",
+    "granite_34b",
+    "stablelm_1_6b",
+    "mistral_nemo_12b",
+    "chatglm3_6b",
+    "qwen2_vl_72b",
+    "rwkv6_7b",
+    "puma_paper",          # the paper's own PUD micro-benchmark "arch"
+]
+
+
+def get_config(name: str) -> ModelConfig:
+    name = name.replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.CONFIG
+
+
+def lm_archs() -> List[str]:
+    return [a for a in ARCHS if a != "puma_paper"]
+
+
+def cells(arch: str) -> Dict[str, RunShape]:
+    """The assigned (shape -> RunShape) cells for one arch, with skips."""
+    cfg = get_config(arch)
+    out = {}
+    for sname, shape in SHAPES.items():
+        if sname == "long_500k" and not cfg.sub_quadratic:
+            continue  # quadratic attention: skipped per assignment (DESIGN.md)
+        out[sname] = shape
+    return out

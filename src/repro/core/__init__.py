@@ -1,0 +1,44 @@
+"""PUMA core: the paper's contribution (allocation policy + PUD model) and
+its TPU adaptation (arena pool + paged KV cache)."""
+from repro.core.dram import (
+    AddressMap,
+    DramGeometry,
+    InterleaveScheme,
+    BANK_REGION_SCHEME,
+    CACHELINE_INTERLEAVED_SCHEME,
+    default_map,
+)
+from repro.core.allocators import (
+    Allocation,
+    HugePageModel,
+    MallocModel,
+    PhysicalMemory,
+    PosixMemalignModel,
+)
+from repro.core.puma import PumaAllocator
+from repro.core.pud import PudCostModel, execute_op, plan_rows, simulate_op
+from repro.core.arena import TileHandle, TilePool
+from repro.core.kv_pool import KVPoolConfig, PagedKVPool
+
+__all__ = [
+    "AddressMap",
+    "DramGeometry",
+    "InterleaveScheme",
+    "BANK_REGION_SCHEME",
+    "CACHELINE_INTERLEAVED_SCHEME",
+    "default_map",
+    "Allocation",
+    "HugePageModel",
+    "MallocModel",
+    "PhysicalMemory",
+    "PosixMemalignModel",
+    "PumaAllocator",
+    "PudCostModel",
+    "execute_op",
+    "plan_rows",
+    "simulate_op",
+    "TileHandle",
+    "TilePool",
+    "KVPoolConfig",
+    "PagedKVPool",
+]

@@ -1,0 +1,342 @@
+"""TPU adaptation of PUMA: a tile-granular, arena-indexed device memory pool.
+
+The HBM of a TPU chip plays the role of the DRAM channel; we pre-allocate one
+flat device buffer (the ``pim_preallocate`` analogue) and manage it host-side
+as ``n_arenas`` arenas ("subarrays") of ``tiles_per_arena`` tiles ("rows").
+A tile is the hardware-aligned unit — for KV-cache blocks a tile is one
+(block_size, kv_heads, head_dim) page whose last two dims are (8,128)-lane
+aligned; for bitplane buffers it is an (8,128) uint32 tile.
+
+Placement policy is PUMA's, verbatim:
+
+* ``alloc``       — worst-fit over arenas (ordered free-count array),
+                    draining the emptiest arena in *contiguous slot runs*;
+* ``alloc_align`` — walk a hint handle's tiles and co-locate tile *k* in the
+                    same arena (adjacent slot when free), worst-fit fallback;
+* handles live in a hashmap so later aligned allocations can find the hint.
+
+Why it matters on TPU: kernels that stream a handle's tiles (paged attention,
+bulk copy/zero) issue one DMA descriptor per *contiguous run* of tile
+indices.  PUMA placement maximizes run length exactly the way it maximizes
+same-subarray residency in DRAM; the metric ``contiguous_run_fraction`` is
+the TPU analogue of the paper's "% of operations executed in PUD".
+
+Baseline policies (``first_fit``, ``random``) mirror malloc/hugepage for the
+benchmark comparison.
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import heapq
+import random
+from typing import Dict, List, Optional, Sequence
+
+__all__ = ["TileHandle", "PoolStats", "TilePool"]
+
+
+@dataclasses.dataclass
+class TileHandle:
+    """A logical buffer: an ordered list of global tile indices."""
+
+    hid: int
+    tiles: List[int]          # global tile index = arena * tiles_per_arena + slot
+
+    def __len__(self) -> int:
+        return len(self.tiles)
+
+    def runs(self) -> List[tuple]:
+        """Maximal (start, length) runs of consecutive tile indices."""
+        out = []
+        i = 0
+        while i < len(self.tiles):
+            j = i
+            while (
+                j + 1 < len(self.tiles) and self.tiles[j + 1] == self.tiles[j] + 1
+            ):
+                j += 1
+            out.append((self.tiles[i], j - i + 1))
+            i = j + 1
+        return out
+
+    def contiguous_run_fraction(self) -> float:
+        """Fraction of tile->tile transitions that stay contiguous.
+
+        1.0 means the whole handle is one DMA descriptor; 0.0 means every
+        tile needs its own gather — the TPU analogue of 0 % PUD execution.
+        """
+        if len(self.tiles) <= 1:
+            return 1.0
+        good = sum(
+            1
+            for a, b in zip(self.tiles, self.tiles[1:])
+            if b == a + 1
+        )
+        return good / (len(self.tiles) - 1)
+
+
+@dataclasses.dataclass
+class PoolStats:
+    allocs: int = 0
+    frees: int = 0
+    align_hits: int = 0
+    align_misses: int = 0
+    failed: int = 0
+
+
+class TilePool:
+    """Host-side allocator over a (n_arenas x tiles_per_arena) tile grid."""
+
+    POLICIES = ("puma", "first_fit", "random")
+
+    def __init__(
+        self,
+        n_arenas: int,
+        tiles_per_arena: int,
+        policy: str = "puma",
+        seed: int = 0,
+    ):
+        assert policy in self.POLICIES, policy
+        self.n_arenas = n_arenas
+        self.tiles_per_arena = tiles_per_arena
+        self.policy = policy
+        self.rng = random.Random(seed)
+        # free slots per arena kept sorted ascending so contiguous runs pop
+        # from the front; PUMA's ordered array is the lazy max-heap below.
+        self._free: List[List[int]] = [
+            list(range(tiles_per_arena)) for _ in range(n_arenas)
+        ]
+        self._heap: List[tuple] = [
+            (-tiles_per_arena, a) for a in range(n_arenas)
+        ]
+        heapq.heapify(self._heap)
+        self._handles: Dict[int, TileHandle] = {}
+        self._next_hid = 1
+        self.stats = PoolStats()
+
+    # -- bookkeeping ---------------------------------------------------------
+    @property
+    def total_tiles(self) -> int:
+        return self.n_arenas * self.tiles_per_arena
+
+    def free_tiles(self) -> int:
+        return sum(len(f) for f in self._free)
+
+    def _push_count(self, arena: int) -> None:
+        heapq.heappush(self._heap, (-len(self._free[arena]), arena))
+
+    def _worst_fit_arena(self) -> Optional[int]:
+        while self._heap:
+            neg, a = self._heap[0]
+            if len(self._free[a]) == -neg and -neg > 0:
+                return a
+            heapq.heappop(self._heap)
+        return None
+
+    def _take_slot(self, arena: int, slot: Optional[int] = None) -> Optional[int]:
+        free = self._free[arena]
+        if not free:
+            return None
+        if slot is None:
+            s = free.pop(0)
+        else:
+            # adjacent-slot request from alloc_align
+            i = bisect.bisect_left(free, slot)
+            if i == len(free) or free[i] != slot:
+                return None
+            free.pop(i)
+            s = slot
+        self._push_count(arena)
+        return arena * self.tiles_per_arena + s
+
+    def _runs_of(self, arena: int) -> List[tuple]:
+        """(start_index_in_free, start_slot, length) maximal runs, ascending."""
+        free = self._free[arena]
+        out = []
+        i = 0
+        while i < len(free):
+            j = i
+            while j + 1 < len(free) and free[j + 1] == free[j] + 1:
+                j += 1
+            out.append((i, free[i], j - i + 1))
+            i = j + 1
+        return out
+
+    def _take_run(self, arena: int, want: int) -> List[int]:
+        """Run-aware take (beyond-paper TPU refinement): prefer the smallest
+        free run that satisfies ``want`` (best-fit over runs, so long runs
+        survive for long allocations), else the longest available run."""
+        runs = self._runs_of(arena)
+        if not runs:
+            return []
+        fitting = [r for r in runs if r[2] >= want]
+        idx, slot, length = (
+            min(fitting, key=lambda r: r[2])
+            if fitting
+            else max(runs, key=lambda r: r[2])
+        )
+        n = min(want, length)
+        del self._free[arena][idx : idx + n]
+        self._push_count(arena)
+        base = arena * self.tiles_per_arena
+        return [base + slot + i for i in range(n)]
+
+    def _global_to_arena(self, tile: int) -> int:
+        return tile // self.tiles_per_arena
+
+    # -- PUMA API ------------------------------------------------------------
+    def alloc(self, n_tiles: int) -> Optional[TileHandle]:
+        if n_tiles > self.free_tiles():
+            self.stats.failed += 1
+            return None
+        tiles: List[int] = []
+        if self.policy == "puma":
+            while len(tiles) < n_tiles:
+                a = self._worst_fit_arena()
+                got = self._take_run(a, n_tiles - len(tiles))
+                if not got:  # arena raced empty via stale heap entry
+                    continue
+                tiles.extend(got)
+        elif self.policy == "first_fit":
+            for a in range(self.n_arenas):
+                while len(tiles) < n_tiles:
+                    t = self._take_slot(a)
+                    if t is None:
+                        break
+                    tiles.append(t)
+                if len(tiles) == n_tiles:
+                    break
+        else:  # random — models a fragmented generic allocator
+            candidates = [
+                a for a in range(self.n_arenas) if self._free[a]
+            ]
+            while len(tiles) < n_tiles:
+                a = self.rng.choice(candidates)
+                free = self._free[a]
+                s = free.pop(self.rng.randrange(len(free)))
+                self._push_count(a)
+                tiles.append(a * self.tiles_per_arena + s)
+                if not free:
+                    candidates.remove(a)
+        h = TileHandle(self._next_hid, tiles)
+        self._next_hid += 1
+        self._handles[h.hid] = h
+        self.stats.allocs += 1
+        return h
+
+    def alloc_align(self, n_tiles: int, hint: TileHandle) -> Optional[TileHandle]:
+        if hint.hid not in self._handles:
+            self.stats.failed += 1
+            return None
+        if n_tiles > self.free_tiles():
+            self.stats.failed += 1
+            return None
+        tiles: List[int] = []
+        for k in range(n_tiles):
+            placed = None
+            if k < len(hint.tiles):
+                arena = self._global_to_arena(hint.tiles[k])
+            elif tiles:
+                # beyond the hint's length: stay local to the handle so far
+                arena = self._global_to_arena(tiles[-1])
+            else:
+                arena = None
+            if arena is not None:
+                # strongest alignment: the *same slot offset* neighbourhood —
+                # try the slot right after the previous placed tile first so
+                # the new handle is itself contiguous, then any slot in the
+                # hinted arena.
+                if tiles and self._global_to_arena(tiles[-1]) == arena:
+                    want = tiles[-1] % self.tiles_per_arena + 1
+                    if want < self.tiles_per_arena:
+                        placed = self._take_slot(arena, want)
+                if placed is None:
+                    placed = self._take_slot(arena)
+                if placed is not None:
+                    self.stats.align_hits += 1
+            if placed is None:
+                self.stats.align_misses += 1
+                a = self._worst_fit_arena()
+                if a is None:
+                    for t in tiles:
+                        self._give_back(t)
+                    self.stats.failed += 1
+                    return None
+                placed = self._take_slot(a)
+            tiles.append(placed)
+        h = TileHandle(self._next_hid, tiles)
+        self._next_hid += 1
+        self._handles[h.hid] = h
+        self.stats.allocs += 1
+        return h
+
+    def extend(self, handle: TileHandle, n_more: int = 1) -> bool:
+        """Grow a live handle (KV-cache decode step): prefer the slot after
+        the handle's last tile, then same arena, then worst-fit."""
+        if handle.hid not in self._handles:
+            return False
+        for _ in range(n_more):
+            placed = None
+            if handle.tiles:
+                last = handle.tiles[-1]
+                arena = self._global_to_arena(last)
+                want = last % self.tiles_per_arena + 1
+                if want < self.tiles_per_arena:
+                    placed = self._take_slot(arena, want)
+                if placed is None and self.policy == "puma":
+                    placed = self._take_slot(arena)
+                    if placed is not None:
+                        self.stats.align_hits += 1
+            if placed is None:
+                if self.policy == "puma":
+                    a = self._worst_fit_arena()
+                    self.stats.align_misses += 1
+                elif self.policy == "first_fit":
+                    a = next(
+                        (i for i in range(self.n_arenas) if self._free[i]), None
+                    )
+                else:
+                    cand = [i for i in range(self.n_arenas) if self._free[i]]
+                    a = self.rng.choice(cand) if cand else None
+                if a is None:
+                    return False
+                if self.policy == "random":
+                    free = self._free[a]
+                    s = free.pop(self.rng.randrange(len(free)))
+                    self._push_count(a)
+                    placed = a * self.tiles_per_arena + s
+                else:
+                    placed = self._take_slot(a)
+            handle.tiles.append(placed)
+        return True
+
+    def _give_back(self, tile: int) -> None:
+        arena = self._global_to_arena(tile)
+        slot = tile % self.tiles_per_arena
+        free = self._free[arena]
+        bisect.insort(free, slot)  # keep sorted so runs pop from the front
+        self._push_count(arena)
+
+    def free(self, handle: TileHandle) -> None:
+        if handle.hid not in self._handles:
+            raise KeyError(f"handle {handle.hid} is not live")
+        del self._handles[handle.hid]
+        for t in handle.tiles:
+            self._give_back(t)
+        self.stats.frees += 1
+
+    # -- metrics ---------------------------------------------------------------
+    def fragmentation(self) -> float:
+        """1 - (largest free run / total free) across the pool."""
+        total = self.free_tiles()
+        if total == 0:
+            return 0.0
+        best = 0
+        for a, free in enumerate(self._free):
+            run = 0
+            prev = None
+            for s in free:
+                run = run + 1 if prev is not None and s == prev + 1 else 1
+                best = max(best, run)
+                prev = s
+        return 1.0 - best / total

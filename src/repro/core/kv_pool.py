@@ -1,0 +1,186 @@
+"""Paged KV-cache pool with PUMA placement — the serving-side integration.
+
+One pool holds the KV blocks of *all* live requests for *all* layers:
+
+  K pool: (num_blocks, block_size, kv_heads, head_dim)   per layer-group
+  V pool: same
+
+A request's logical KV stream is a :class:`~repro.core.arena.TileHandle`
+(one tile = one block).  Placement uses PUMA policy: the first request block
+goes worst-fit, subsequent blocks of the same request go ``extend`` (same
+arena, adjacent slot when possible), and the V handle is ``alloc_align``-ed
+against the K handle so K/V block *k* live at mirrored offsets.
+
+The device side keeps everything as jnp arrays plus an int32 *block table*
+(max_seqs, max_blocks) — the TPU-idiomatic replacement for the paper's
+re-mmap (see DESIGN.md §2).  `paged_attention` consumes the table; its fast
+path coalesces contiguous block runs into single DMA streams, so PUMA
+placement translates directly into fewer descriptors.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.arena import TileHandle, TilePool
+
+__all__ = ["KVPoolConfig", "PagedKVPool"]
+
+
+@dataclasses.dataclass(frozen=True)
+class KVPoolConfig:
+    num_blocks: int = 1024
+    block_size: int = 16            # tokens per block
+    kv_heads: int = 8
+    head_dim: int = 128
+    n_layers: int = 1               # layers sharing this pool object
+    max_seqs: int = 64
+    max_blocks_per_seq: int = 256
+    blocks_per_arena: int = 64      # "subarray" capacity
+    policy: str = "puma"
+    dtype: str = "bfloat16"
+
+    @property
+    def n_arenas(self) -> int:
+        assert self.num_blocks % self.blocks_per_arena == 0
+        return self.num_blocks // self.blocks_per_arena
+
+
+class PagedKVPool:
+    """Host bookkeeping + device buffers for paged KV serving."""
+
+    def __init__(self, cfg: KVPoolConfig):
+        self.cfg = cfg
+        self.pool = TilePool(cfg.n_arenas, cfg.blocks_per_arena, cfg.policy)
+        dt = jnp.dtype(cfg.dtype)
+        shape = (cfg.n_layers, cfg.num_blocks, cfg.block_size, cfg.kv_heads, cfg.head_dim)
+        self.k = jnp.zeros(shape, dt)
+        self.v = jnp.zeros(shape, dt)
+        # seq slot -> (k_handle, token_count)
+        self._seqs: Dict[int, Tuple[TileHandle, int]] = {}
+        self._free_slots = list(range(cfg.max_seqs))
+
+    # -- request lifecycle ----------------------------------------------------
+    def admit(self, n_prompt_tokens: int) -> Optional[int]:
+        """Admit a request; allocate blocks for its prompt. Returns seq slot."""
+        if not self._free_slots:
+            return None
+        blocks = -(-n_prompt_tokens // self.cfg.block_size)
+        h = self.pool.alloc(blocks)
+        if h is None:
+            return None
+        slot = self._free_slots.pop(0)
+        self._seqs[slot] = (h, n_prompt_tokens)
+        return slot
+
+    def fork(
+        self, slot: int, copy_data: bool = True, use_kernel: bool = False
+    ) -> Optional[int]:
+        """Beam/prefix fork: new sequence whose blocks are PUMA-aligned to
+        the parent's, with the KV pages cloned in-pool — the RowClone
+        analogue (``pud_bulk.pool_block_copy``; PUMA placement keeps source
+        and destination in the same arena, so on the PUD substrate the copy
+        is a same-subarray row-to-row transfer)."""
+        if slot not in self._seqs or not self._free_slots:
+            return None
+        parent, ntok = self._seqs[slot]
+        h = self.pool.alloc_align(len(parent.tiles), parent)
+        if h is None:
+            return None
+        if copy_data and parent.tiles:
+            from repro.kernels.pud_bulk.ops import pool_block_copy
+
+            src = jnp.asarray(parent.tiles, jnp.int32)
+            dst = jnp.asarray(h.tiles, jnp.int32)
+            L = self.cfg.n_layers
+            nb = self.cfg.num_blocks
+            # fold the layer dim into the block index so one kernel call
+            # clones every layer's pages
+            offs = (jnp.arange(L, dtype=jnp.int32) * nb)[:, None]
+            src_all = (src[None, :] + offs).reshape(-1)
+            dst_all = (dst[None, :] + offs).reshape(-1)
+            kflat = self.k.reshape((L * nb,) + self.k.shape[2:])
+            vflat = self.v.reshape((L * nb,) + self.v.shape[2:])
+            self.k = pool_block_copy(kflat, src_all, dst_all, use_kernel=use_kernel).reshape(self.k.shape)
+            self.v = pool_block_copy(vflat, src_all, dst_all, use_kernel=use_kernel).reshape(self.v.shape)
+        new_slot = self._free_slots.pop(0)
+        self._seqs[new_slot] = (h, ntok)
+        return new_slot
+
+    def append_token(self, slot: int) -> bool:
+        """Decode step bookkeeping: extend by a block when the current one fills."""
+        h, ntok = self._seqs[slot]
+        ntok += 1
+        if ntok > len(h.tiles) * self.cfg.block_size:
+            if not self.pool.extend(h, 1):
+                return False
+        self._seqs[slot] = (h, ntok)
+        return True
+
+    def release(self, slot: int) -> None:
+        h, _ = self._seqs.pop(slot)
+        self.pool.free(h)
+        self._free_slots.append(slot)
+
+    # -- device views -----------------------------------------------------------
+    def block_table(self) -> np.ndarray:
+        """(max_seqs, max_blocks) int32, -1 padded."""
+        cfg = self.cfg
+        tbl = np.full((cfg.max_seqs, cfg.max_blocks_per_seq), -1, np.int32)
+        for slot, (h, _) in self._seqs.items():
+            n = min(len(h.tiles), cfg.max_blocks_per_seq)
+            tbl[slot, :n] = h.tiles[:n]
+        return tbl
+
+    def seq_lens(self) -> np.ndarray:
+        out = np.zeros((self.cfg.max_seqs,), np.int32)
+        for slot, (_, ntok) in self._seqs.items():
+            out[slot] = ntok
+        return out
+
+    def write_prompt_kv(
+        self, slot: int, layer: int, k: jax.Array, v: jax.Array
+    ) -> None:
+        """Scatter a prompt's K/V (n_tokens, kv_heads, head_dim) into the pool."""
+        cfg = self.cfg
+        h, _ = self._seqs[slot]
+        n = k.shape[0]
+        pad = len(h.tiles) * cfg.block_size - n
+        if pad:
+            k = jnp.pad(k, ((0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, pad), (0, 0), (0, 0)))
+        kb = k.reshape(len(h.tiles), cfg.block_size, cfg.kv_heads, cfg.head_dim)
+        vb = v.reshape(len(h.tiles), cfg.block_size, cfg.kv_heads, cfg.head_dim)
+        idx = jnp.asarray(h.tiles, jnp.int32)
+        self.k = self.k.at[layer, idx].set(kb.astype(self.k.dtype))
+        self.v = self.v.at[layer, idx].set(vb.astype(self.v.dtype))
+
+    def write_token_kv(
+        self, slot: int, layer: int, k1: jax.Array, v1: jax.Array
+    ) -> None:
+        """Write one decoded token's K/V (kv_heads, head_dim)."""
+        cfg = self.cfg
+        h, ntok = self._seqs[slot]
+        pos = ntok - 1
+        block = h.tiles[pos // cfg.block_size]
+        off = pos % cfg.block_size
+        self.k = self.k.at[layer, block, off].set(k1.astype(self.k.dtype))
+        self.v = self.v.at[layer, block, off].set(v1.astype(self.v.dtype))
+
+    # -- PUMA metric --------------------------------------------------------------
+    def contiguity_report(self) -> Dict[str, float]:
+        """Pool-wide contiguous-run statistics (the paper's '% in PUD' analogue)."""
+        fracs, runs, tiles = [], 0, 0
+        for h, _ in self._seqs.values():
+            fracs.append(h.contiguous_run_fraction())
+            runs += len(h.runs())
+            tiles += len(h.tiles)
+        return {
+            "mean_contiguous_fraction": float(np.mean(fracs)) if fracs else 1.0,
+            "descriptors_per_tile": runs / tiles if tiles else 0.0,
+            "live_seqs": float(len(self._seqs)),
+        }

@@ -1,0 +1,243 @@
+"""PUD executability + timing model (RowClone / Ambit substrate, paper §3).
+
+The evaluated substrate executes, *in DRAM*:
+
+* ``zero``  — RowClone zero-init  (copy from a reserved all-zeros row),
+* ``copy``  — RowClone FPM intra-subarray row copy,
+* ``and/or/not`` — Ambit triple-row-activation Boolean ops,
+
+and each operation proceeds row by row.  A row-granular op is PUD-executable
+iff **every operand's row** (i) is physically contiguous, (ii) starts at a
+rank-row boundary, and (iii) all operand rows share one global subarray —
+exactly the paper's criterion ("source and destination operands are
+contiguous in physical memory and DRAM-row-aligned", same subarray).
+Rows that fail fall back to the CPU, as does the sub-row tail of every
+allocation.
+
+Timing constants approximate DDR3/4 values used by RowClone [104] and
+Ambit [101]: an AAP (ACTIVATE-ACTIVATE-PRECHARGE) command sequence costs
+~tRAS+tRP ≈ 90 ns and touches a full 8 KB rank-row.  The CPU fallback prices
+a streaming read/write through the memory hierarchy.  Absolute numbers only
+set the scale; the paper's Figure 2 normalizes to the malloc baseline, and
+so do we.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.allocators import Allocation
+from repro.core.dram import AddressMap
+
+__all__ = ["OpKind", "PudCostModel", "RowPlan", "plan_rows", "simulate_op", "execute_op"]
+
+
+OpKind = str  # "zero" | "copy" | "and" | "or" | "not"
+
+#: operands (incl. destination) per op
+N_OPERANDS: Dict[str, int] = {"zero": 1, "copy": 2, "and": 3, "or": 3, "not": 2}
+
+#: AAP sequences per row for each PUD op (RowClone/Ambit command counts)
+PUD_AAPS: Dict[str, int] = {"zero": 1, "copy": 2, "and": 4, "or": 4, "not": 3}
+
+
+@dataclasses.dataclass(frozen=True)
+class PudCostModel:
+    aap_ns: float = 90.0            # ACT(tRAS 35ns) + ACT + PRE(tRP 15ns) ≈ 90ns
+    pud_issue_ns: float = 20.0      # memory-controller command overhead / row
+    cpu_bw_gbs: float = 10.0        # streaming CPU bandwidth (read xor write)
+    cpu_op_overhead_ns: float = 250.0   # call + loop setup per operation
+    cpu_row_touch_ns: float = 40.0      # per-row TLB/prefetch restart on the
+                                        # fallback path (data pulled to CPU)
+
+    def pud_row_ns(self, op: OpKind) -> float:
+        return PUD_AAPS[op] * self.aap_ns + self.pud_issue_ns
+
+    def cpu_bytes_moved(self, op: OpKind, nbytes: int) -> int:
+        # zero: write N; copy: read N + write N; and/or: 2 reads + 1 write;
+        # not: read + write.
+        streams = {"zero": 1, "copy": 2, "and": 3, "or": 3, "not": 2}[op]
+        return streams * nbytes
+
+    def cpu_ns(self, op: OpKind, nbytes: int, nrows: int = 1) -> float:
+        move = self.cpu_bytes_moved(op, nbytes) / self.cpu_bw_gbs  # ns (B/GBps)
+        return move + nrows * self.cpu_row_touch_ns
+
+
+@dataclasses.dataclass
+class RowPlan:
+    """Per-row execution decision for one op over parallel operands."""
+
+    n_rows: int                 # full rows in the logical buffers
+    in_pud: List[bool]          # len n_rows
+    tail_bytes: int             # sub-row remainder (always CPU)
+
+    @property
+    def pud_fraction(self) -> float:
+        if self.n_rows == 0:
+            return 0.0
+        return sum(self.in_pud) / self.n_rows
+
+
+def _row_subarray(
+    alloc: Allocation, row: int, region_bytes: int, amap: AddressMap
+) -> Optional[int]:
+    """Global subarray of logical row ``row``; None if not PUD-capable."""
+    off = row * region_bytes
+    pa = alloc.contiguous_run(off, region_bytes)
+    if pa is None or not amap.region_is_aligned(pa):
+        return None
+    return amap.region_subarray(pa)
+
+
+def plan_rows(
+    op: OpKind, operands: Sequence[Allocation], amap: AddressMap
+) -> RowPlan:
+    """Decide, row by row, whether the op can execute in DRAM.
+
+    PUD ops act on whole rows, so the final *partial* logical row can still
+    execute in DRAM when every allocator padded the allocation out to a full
+    owned region (PUMA and per-mmap huge pages do; heap allocators do not —
+    their extents stop at the requested size, and operating on the full row
+    would clobber a neighbour).  ``_row_subarray``'s full-region contiguity
+    check is exactly that ownership test.
+    """
+    assert len(operands) == N_OPERANDS[op], (op, len(operands))
+    size = min(a.size for a in operands)
+    region = amap.region_bytes
+    n_full, tail = divmod(size, region)
+    n_rows = n_full + (1 if tail else 0)
+    in_pud: List[bool] = []
+    for r in range(n_rows):
+        sas = [_row_subarray(a, r, region, amap) for a in operands]
+        ok = sas[0] is not None and all(s == sas[0] for s in sas)
+        in_pud.append(ok)
+    tail_bytes = 0 if (not tail or in_pud[-1]) else tail
+    return RowPlan(n_rows=n_rows, in_pud=in_pud, tail_bytes=tail_bytes)
+
+
+@dataclasses.dataclass
+class SimResult:
+    op: OpKind
+    size: int
+    pud_fraction: float
+    t_ns: float          # time with the PUD substrate available
+    t_cpu_ns: float      # time if everything ran on the CPU
+
+    @property
+    def speedup_vs_cpu(self) -> float:
+        return self.t_cpu_ns / self.t_ns if self.t_ns > 0 else float("inf")
+
+
+def simulate_op(
+    op: OpKind,
+    operands: Sequence[Allocation],
+    amap: AddressMap,
+    model: PudCostModel = PudCostModel(),
+    adaptive: bool = True,
+) -> SimResult:
+    """Price one op.  ``adaptive`` (beyond-paper refinement): the PUD driver
+    knows both cost models and only offloads when DRAM execution is cheaper —
+    sub-row ops stay on the CPU, so PUMA never *loses* to the baseline."""
+    plan = plan_rows(op, operands, amap)
+    region = amap.region_bytes
+    size = min(a.size for a in operands)
+
+    pud_rows = sum(plan.in_pud)
+    # CPU-path bytes: full regions for interior misses; the final partial
+    # row contributes only its real tail bytes.
+    cpu_rows = plan.n_rows - pud_rows
+    cpu_bytes = cpu_rows * region
+    if plan.tail_bytes:  # last row is a CPU partial row, not a full region
+        cpu_bytes += plan.tail_bytes - region
+    t = pud_rows * model.pud_row_ns(op)
+    if cpu_rows:
+        t += model.cpu_op_overhead_ns
+        t += model.cpu_ns(op, cpu_bytes, cpu_rows)
+    elif pud_rows:
+        t += model.cpu_op_overhead_ns  # syscall into the PUD driver
+
+    t_cpu = model.cpu_op_overhead_ns + model.cpu_ns(op, size, max(plan.n_rows, 1))
+    if adaptive and t > t_cpu:
+        t = t_cpu
+    return SimResult(op, size, plan.pud_fraction, t, t_cpu)
+
+
+# ---------------------------------------------------------------------------
+# Functional execution: actually perform the op through the page tables on a
+# numpy "physical memory", so tests can assert that PUD dispatch computes the
+# same bytes as a plain vector op regardless of which rows took which path.
+# ---------------------------------------------------------------------------
+
+def _apply_rowwise(op: OpKind, dst: np.ndarray, srcs: List[np.ndarray]) -> None:
+    if op == "zero":
+        dst[:] = 0
+    elif op == "copy":
+        dst[:] = srcs[0]
+    elif op == "and":
+        np.bitwise_and(srcs[0], srcs[1], out=dst)
+    elif op == "or":
+        np.bitwise_or(srcs[0], srcs[1], out=dst)
+    elif op == "not":
+        np.bitwise_not(srcs[0], out=dst)
+    else:
+        raise ValueError(op)
+
+
+def execute_op(
+    op: OpKind,
+    operands: Sequence[Allocation],
+    phys: np.ndarray,
+    amap: AddressMap,
+) -> RowPlan:
+    """Execute ``op`` with dst = operands[-1], srcs = operands[:-1].
+
+    Every byte moves through the VA->PA mapping; PUD-eligible rows use the
+    row-granular path (modelling in-DRAM execution), the rest byte-copies via
+    the "CPU".  Both paths write the same bytes — the point is to validate
+    that the *dispatch plan* is sound, which tests assert by comparing
+    against a whole-buffer numpy op.
+    """
+    plan = plan_rows(op, operands, amap)
+    region = amap.region_bytes
+    size = min(a.size for a in operands)
+    dst, srcs = operands[-1], list(operands[:-1])
+
+    def read(a: Allocation, off: int, n: int) -> np.ndarray:
+        out = np.empty(n, np.uint8)
+        done = 0
+        while done < n:
+            pa = a.pa_of(off + done)
+            run = 1
+            # extend run while physically contiguous
+            while done + run < n and a.pa_of(off + done + run) == pa + run:
+                run += 1
+            out[done : done + run] = phys[pa : pa + run]
+            done += run
+        return out
+
+    def write(a: Allocation, off: int, buf: np.ndarray) -> None:
+        done = 0
+        n = len(buf)
+        while done < n:
+            pa = a.pa_of(off + done)
+            run = 1
+            while done + run < n and a.pa_of(off + done + run) == pa + run:
+                run += 1
+            phys[pa : pa + run] = buf[done : done + run]
+            done += run
+
+    for r in range(plan.n_rows):
+        off = r * region
+        # PUD rows operate on the full (owned, padded) region; the final CPU
+        # row only touches the real tail bytes.
+        n = region
+        if not plan.in_pud[r] and r == plan.n_rows - 1 and plan.tail_bytes:
+            n = plan.tail_bytes
+        src_rows = [read(s, off, n) for s in srcs]
+        out = np.empty(n, np.uint8)
+        _apply_rowwise(op, out, src_rows)
+        write(dst, off, out)
+    return plan

@@ -1,0 +1,213 @@
+"""PUMA: subarray-aware lazy allocation for Processing-Using-Memory (paper §2).
+
+Faithful functional reproduction of the kernel module:
+
+* ``pim_preallocate(n)`` — reserve ``n`` huge pages into the PUD pool; split
+  each into rank-row-sized *memory regions*; index every region by its
+  global subarray ID using the DRAM interleave decode (:mod:`repro.core.dram`).
+* ``pim_alloc(size)`` — worst-fit over the *ordered array* of per-subarray
+  free-region counts (paper: a buddy-allocator-style ordered array [146]):
+  take regions from the subarray with the most free regions, spilling to the
+  next-largest until satisfied.  The returned object is virtually contiguous
+  (the kernel re-mmaps scattered regions; here the Allocation's extents model
+  exactly that mapping).
+* ``pim_alloc_align(size, hint)`` — walk the hint allocation's regions and
+  place region *k* of the new allocation in the *same subarray* as region
+  *k* of the hint, falling back to worst-fit when that subarray is full
+  (paper §2 "Aligned Allocation", steps 1-5).
+* an *allocation hashmap* keyed by virtual address tracks live allocations
+  so future ``pim_alloc_align`` calls can find their hint.
+
+``pim_free`` is added beyond the paper so that long-running property tests
+and the serving integration can recycle the pool.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Dict, List, Optional
+
+from repro.core.allocators import HUGE_PAGE, Allocation, Extent, PhysicalMemory
+from repro.core.dram import AddressMap
+
+__all__ = ["PumaStats", "PumaAllocator"]
+
+
+@dataclasses.dataclass
+class PumaStats:
+    preallocated_regions: int = 0
+    live_allocations: int = 0
+    regions_in_use: int = 0
+    align_hits: int = 0      # regions placed in the hinted subarray
+    align_misses: int = 0    # worst-fit fallbacks during pim_alloc_align
+    failed_allocs: int = 0
+
+
+class _OrderedArray:
+    """Per-subarray free-region bookkeeping with worst-fit selection.
+
+    The paper uses "an ordered array ... similar to the Linux buddy
+    allocator, where each entry represents the number of memory regions in a
+    single subarray".  We keep (a) a free-list per subarray and (b) a lazy
+    max-heap over (count, subarray) for O(log S) worst-fit.
+    """
+
+    def __init__(self):
+        self.free: Dict[int, List[int]] = {}   # subarray -> region PAs (LIFO)
+        self._heap: List[tuple] = []           # (-count, subarray), lazy
+
+    def add_region(self, subarray: int, pa: int) -> None:
+        lst = self.free.setdefault(subarray, [])
+        lst.append(pa)
+        heapq.heappush(self._heap, (-len(lst), subarray))
+
+    def take_from(self, subarray: int) -> Optional[int]:
+        lst = self.free.get(subarray)
+        if not lst:
+            return None
+        pa = lst.pop()
+        heapq.heappush(self._heap, (-len(lst), subarray))
+        return pa
+
+    def worst_fit_subarray(self) -> Optional[int]:
+        """Subarray with the largest number of free regions (lazy heap)."""
+        while self._heap:
+            neg, sa = self._heap[0]
+            if len(self.free.get(sa, ())) == -neg and -neg > 0:
+                return sa
+            heapq.heappop(self._heap)  # stale entry
+        return None
+
+    def total_free(self) -> int:
+        return sum(len(v) for v in self.free.values())
+
+    def free_counts(self) -> Dict[int, int]:
+        return {sa: len(v) for sa, v in self.free.items() if v}
+
+
+class PumaAllocator:
+    name = "puma"
+
+    def __init__(self, mem: PhysicalMemory, amap: Optional[AddressMap] = None):
+        self.mem = mem
+        self.amap = amap or mem.amap
+        self.region_bytes = self.amap.region_bytes
+        self._ordered = _OrderedArray()
+        self._allocations: Dict[int, Allocation] = {}  # the allocation hashmap
+        self._regions_of: Dict[int, List[int]] = {}    # va -> region PAs
+        self._va_next = 0x7000_0000_0000
+        self.stats = PumaStats()
+
+    # -- 1) pre-allocation (paper step (1)) ---------------------------------
+    def pim_preallocate(self, n_huge_pages: int) -> int:
+        """Populate the PUD pool; returns the number of regions indexed."""
+        added = 0
+        for hp in self.mem.take_huge(n_huge_pages):
+            for rpa, subarray in self.amap.regions_in_range(hp, HUGE_PAGE):
+                self._ordered.add_region(subarray, rpa)
+                added += 1
+        self.stats.preallocated_regions += added
+        return added
+
+    # -- helpers -------------------------------------------------------------
+    def _nregions(self, size: int) -> int:
+        return -(-size // self.region_bytes)
+
+    def _mk_allocation(self, size: int, region_pas: List[int]) -> Allocation:
+        """Re-mmap model: scattered regions become one contiguous VA range."""
+        va = self._va_next
+        self._va_next += len(region_pas) * self.region_bytes
+        extents = [
+            Extent(i * self.region_bytes, pa, self.region_bytes)
+            for i, pa in enumerate(region_pas)
+        ]
+        alloc = Allocation(va, size, extents, self.name)
+        self._allocations[va] = alloc
+        self._regions_of[va] = region_pas
+        self.stats.live_allocations += 1
+        self.stats.regions_in_use += len(region_pas)
+        return alloc
+
+    def _release(self, region_pas: List[int]) -> None:
+        for pa in region_pas:
+            self._ordered.add_region(self.amap.region_subarray(pa), pa)
+
+    # -- 2) first allocation: worst-fit (paper step (2)) ----------------------
+    def pim_alloc(self, size: int) -> Optional[Allocation]:
+        need = self._nregions(size)
+        if need > self._ordered.total_free():
+            self.stats.failed_allocs += 1
+            return None
+        got: List[int] = []
+        while len(got) < need:
+            sa = self._ordered.worst_fit_subarray()
+            if sa is None:  # cannot happen given the total_free gate
+                self._release(got)
+                self.stats.failed_allocs += 1
+                return None
+            # drain the worst-fit subarray before moving to the next largest
+            while len(got) < need:
+                pa = self._ordered.take_from(sa)
+                if pa is None:
+                    break
+                got.append(pa)
+        return self._mk_allocation(size, got)
+
+    # -- 3) aligned allocation (paper step (3)) -------------------------------
+    def pim_alloc_align(self, size: int, hint: Allocation) -> Optional[Allocation]:
+        # step 1: hashmap lookup; no match -> allocation fails (paper)
+        if hint.va not in self._allocations:
+            self.stats.failed_allocs += 1
+            return None
+        hint_regions = self._regions_of[hint.va]
+        need = self._nregions(size)
+        if need > self._ordered.total_free():
+            self.stats.failed_allocs += 1
+            return None
+        got: List[int] = []
+        # steps 2-4: iterate hint regions, allocate in the same subarray,
+        # fall back to worst-fit when that subarray has no free region.
+        for k in range(need):
+            if k < len(hint_regions):
+                target_sa = self.amap.region_subarray(hint_regions[k])
+                pa = self._ordered.take_from(target_sa)
+                if pa is not None:
+                    got.append(pa)
+                    self.stats.align_hits += 1
+                    continue
+            self.stats.align_misses += 1
+            sa = self._ordered.worst_fit_subarray()
+            if sa is None:
+                self._release(got)
+                self.stats.failed_allocs += 1
+                return None
+            got.append(self._ordered.take_from(sa))
+        # step 5: re-mmap into contiguous VA (modelled by _mk_allocation)
+        return self._mk_allocation(size, got)
+
+    # -- beyond-paper: recycling ----------------------------------------------
+    def pim_free(self, alloc: Allocation) -> None:
+        if alloc.va not in self._allocations:
+            raise KeyError(f"{alloc.va:#x} is not a live PUMA allocation")
+        region_pas = self._regions_of.pop(alloc.va)
+        del self._allocations[alloc.va]
+        self._release(region_pas)
+        self.stats.live_allocations -= 1
+        self.stats.regions_in_use -= len(region_pas)
+
+    # introspection used by tests / benchmarks
+    def lookup(self, va: int) -> Optional[Allocation]:
+        return self._allocations.get(va)
+
+    def free_regions(self) -> int:
+        return self._ordered.total_free()
+
+    def free_counts(self) -> Dict[int, int]:
+        return self._ordered.free_counts()
+
+    # uniform interface with the baseline allocators
+    def alloc(self, size: int) -> Allocation:
+        a = self.pim_alloc(size)
+        if a is None:
+            raise MemoryError("PUMA pool exhausted")
+        return a

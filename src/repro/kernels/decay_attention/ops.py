@@ -1,0 +1,49 @@
+"""Wrapper: (B, S, H, d) layout -> chunked kernel layout with padding.
+
+The pure-jnp oracle is repro.models.linear_scan.chunked_decay_attention /
+decay_attention_ref (the model path the kernel replaces on real TPUs).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decay_attention import kernel as _k
+from repro.models.linear_scan import decay_attention_ref
+
+
+def decay_attention(
+    q: jax.Array,          # (B, S, H, dk)
+    k: jax.Array,
+    v: jax.Array,          # (B, S, H, dv)
+    log_w: jax.Array,      # (B, S, H, dk)
+    *,
+    bonus: Optional[jax.Array] = None,   # (H, dk) rwkv "u"
+    chunk: int = _k.CHUNK,
+    use_kernel: bool = True,
+) -> jax.Array:
+    if not use_kernel:
+        return decay_attention_ref(q, k, v, log_w, bonus=bonus)
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        zp = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v, log_w = zp(q), zp(k), zp(v), zp(log_w)
+    nc = q.shape[1] // chunk
+
+    def to_kernel(x, d):
+        return (
+            x.reshape(B, nc, chunk, H, d).transpose(0, 3, 1, 2, 4)
+        )  # (B, H, nc, Q, d)
+
+    u = bonus if bonus is not None else jnp.zeros((H, dk), q.dtype)
+    out = _k.decay_attention(
+        to_kernel(q, dk), to_kernel(k, dk), to_kernel(v, dv), to_kernel(log_w, dk),
+        u.astype(q.dtype),
+        chunk=chunk, use_bonus=bonus is not None,
+    )
+    out = out.transpose(0, 2, 3, 1, 4).reshape(B, nc * chunk, H, dv)
+    return out[:, :S]

@@ -1,0 +1,47 @@
+"""Shape-normalizing wrapper: pads sequence and head dims to kernel tiles."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as _k
+from repro.kernels.flash_attention import ref as _ref
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def flash_attention(
+    q: jax.Array,   # (B, Hq, Sq, D)
+    k: jax.Array,   # (B, Hkv, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    use_kernel: bool = True,
+) -> jax.Array:
+    if not use_kernel:
+        return _ref.attention_ref(q, k, v, causal=causal, scale=scale)
+    B, Hq, Sq, D = q.shape
+    Sk = k.shape[2]
+    scale = (D ** -0.5) if scale is None else scale
+    bq, bk = min(block_q, max(Sq, 8)), min(block_k, max(Sk, 8))
+    # head_dim alignment: MXU lanes want 128 multiples (64 also supported);
+    # zero-padding D is exact for both QK^T and PV.
+    Dp = D if D in (64, 128) or D % 128 == 0 else -(-D // 128) * 128
+    qp = _pad_to(_pad_to(q, 2, bq), 3, Dp)
+    kp = _pad_to(_pad_to(k, 2, bk), 3, Dp)
+    vp = _pad_to(_pad_to(v, 2, bk), 3, Dp)
+    out = _k.flash_attention(
+        qp, kp, vp,
+        causal=causal, scale=scale, block_q=bq, block_k=bk, kv_len=Sk,
+    )
+    return out[:, :, :Sq, :D]

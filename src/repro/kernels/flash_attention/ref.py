@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for flash_attention (materializes the score matrix)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,   # (B, Hq, Sq, D)
+    k: jax.Array,   # (B, Hkv, Sk, D)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    kv_len: int | None = None,
+) -> jax.Array:
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    scale = (D ** -0.5) if scale is None else scale
+    kv_len = Sk if kv_len is None else kv_len
+    group = Hq // Hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    kpos = jnp.arange(Sk)[None, None, None, :]
+    mask = kpos < kv_len
+    if causal:
+        qpos = jnp.arange(Sq)[None, None, :, None]
+        mask = mask & (qpos >= kpos)
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows -> zeros
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,45 @@
+"""Wrapper: (B, Hq, D) query layout -> grouped kernel layout, with sublane
+padding of the query-head group."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention import kernel as _k
+from repro.kernels.paged_attention import ref as _ref
+
+
+def paged_attention(
+    q: jax.Array,             # (B, Hq, D)
+    k_pool: jax.Array,        # (num_blocks, block_size, Hkv, D)
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, max_blocks)
+    seq_lens: jax.Array,      # (B,)
+    *,
+    scale: float | None = None,
+    use_kernel: bool = True,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    Hkv = k_pool.shape[2]
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+    qg = q.reshape(B, Hkv, group, D)
+    # pad the group dim to the 8-row sublane so VMEM scratch tiles cleanly
+    gpad = (-group) % 8
+    if gpad and use_kernel:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, gpad), (0, 0)))
+    if use_kernel:
+        out = _k.paged_attention(
+            qg, k_pool, v_pool,
+            block_tables.astype(jnp.int32), seq_lens.astype(jnp.int32),
+            scale=scale,
+        )
+        out = out[:, :, :group]
+    else:
+        out = _ref.paged_attention_ref(
+            qg, k_pool, v_pool,
+            block_tables.astype(jnp.int32), seq_lens.astype(jnp.int32),
+            scale=scale,
+        )
+    return out.reshape(B, Hq, D)

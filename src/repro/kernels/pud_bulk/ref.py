@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the pud_bulk kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bulk_op_ref(*operands: jax.Array, op: str) -> jax.Array:
+    if op == "zero":
+        return jnp.zeros_like(operands[0])
+    if op == "copy":
+        return operands[0]
+    if op == "not":
+        return ~operands[0]
+    if op == "and":
+        return operands[0] & operands[1]
+    if op == "or":
+        return operands[0] | operands[1]
+    if op == "xor":
+        return operands[0] ^ operands[1]
+    if op == "maj":
+        x, y, z = operands
+        return (x & y) | (y & z) | (x & z)
+    raise ValueError(op)
+
+
+def block_copy_ref(pool: jax.Array, src_dst: jax.Array) -> jax.Array:
+    """Parallel-copy semantics (matches the kernel): every source is read
+    from the *pre-op* pool, then all destinations are written.  Callers (the
+    KV pool fork path) guarantee src/dst disjointness."""
+    gathered = pool[src_dst[:, 0]]
+    return pool.at[src_dst[:, 1]].set(gathered)

@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below is the multi-pod dry-run driver:
+# for every (architecture x input-shape x mesh) cell it lowers + compiles the
+# real step function against ShapeDtypeStruct inputs, proving the sharding
+# config is coherent at 256/512 chips, and records memory / cost / collective
+# statistics for EXPERIMENTS.md.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2_vl_72b \
+#       --shape train_4k --mesh single --attn chunked
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ModelConfig, RunShape
+from repro.configs.registry import cells, get_config, lm_archs
+from repro.dist import sharding as shd
+from repro.launch import hlo_stats
+from repro.launch.inputs import abstract_cache, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import LM
+from repro.optim import adamw as opt_mod
+from repro.train.step import build_train_step
+
+RESULTS_PATH = "experiments/dryrun_results.json"
+
+#: gradient-accumulation microbatching for train cells ("auto"): sized so the
+#: per-device live set (logits + per-layer remat carries) fits v5e's 16 GB.
+ACCUM_DEFAULTS = {
+    "qwen2_vl_72b": 16,
+    "granite_34b": 8,
+    "mistral_nemo_12b": 4,
+    "zamba2_7b": 4,
+    "chatglm3_6b": 4,
+    "rwkv6_7b": 4,
+    "granite_moe_3b_a800m": 4,
+    "granite_moe_1b_a400m": 4,
+}
+
+#: long-context decode has global_batch=1, so the "data" axis is idle —
+#: spread the KV-cache length over BOTH axes (32k-per-shard pages).
+SHAPE_RULES = {"long_500k": {"kv_seq": ("model", "data")}}
+
+
+def auto_accum(arch: str, shape: RunShape) -> int:
+    if shape.mode != "train":
+        return 1
+    return ACCUM_DEFAULTS.get(arch, 2)
+
+
+#: decode cells whose bf16 KV cache cannot fit 16 GB/chip even fully
+#: sharded: store KV pages quantized (fp8), computing in bf16 on read.
+KV_DTYPE_DEFAULTS = {("qwen2_vl_72b", "decode_32k"): "float8_e4m3fn"}
+
+
+def _batch_shardings(ispecs: Dict, mesh) -> Dict:
+    axes = {
+        k: ("batch",) + (None,) * (len(v.shape) - 1) for k, v in ispecs.items()
+    }
+    return shd.axes_to_shardings(axes, ispecs, mesh)
+
+
+def build_cell(
+    cfg: ModelConfig,
+    shape: RunShape,
+    mesh,
+    *,
+    attn_impl: str = "chunked",
+    remat: str = "full",
+    scan_layers: bool = True,
+    rules: Optional[Dict] = None,
+    accum_steps: int = 1,
+):
+    """Returns (jitted_fn, abstract_args) for one cell under ``mesh``."""
+    model = LM(cfg, attn_impl=attn_impl, remat=remat, scan_layers=scan_layers)
+    shd.set_mesh(mesh)
+    if rules:
+        shd.ACT_RULES.update(rules)  # caller restores (see run_cell)
+
+    params_abs = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    if shape.mode != "train":
+        # serving checkpoints are bf16 (f32 master weights only exist in the
+        # optimizer state); at 72B TP-16 that's 9 GB/chip instead of 18.
+        params_abs = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(
+                a.shape, jnp.bfloat16 if a.dtype == jnp.float32 else a.dtype
+            ),
+            params_abs,
+        )
+    pshard = shd.shardings_for(model.param_specs(), params_abs, mesh)
+    params_abs = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        params_abs, pshard,
+    )
+    ispecs = input_specs(cfg, shape)
+    bshard = _batch_shardings(ispecs, mesh)
+    batch_abs = {
+        k: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=bshard[k])
+        for k, v in ispecs.items()
+    }
+
+    if shape.mode == "train":
+        ocfg = opt_mod.AdamWConfig()
+        step = build_train_step(model, ocfg, accum_steps=accum_steps)
+        opt_abs = jax.eval_shape(opt_mod.init_opt_state, params_abs)
+        # moments share the param specs; step counter replicated
+        mu_shard = pshard
+        nu_shard = pshard
+        opt_abs = opt_mod.OptState(
+            mu=jax.tree.map(
+                lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+                opt_abs.mu, mu_shard,
+            ),
+            nu=jax.tree.map(
+                lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+                opt_abs.nu, nu_shard,
+            ),
+            step=opt_abs.step,
+        )
+        fn = jax.jit(step, donate_argnums=(0, 1))
+        return fn, (params_abs, opt_abs, batch_abs), model
+
+    if shape.mode == "prefill":
+        fn = jax.jit(model.prefill_logits)
+        return fn, (params_abs, batch_abs), model
+
+    # decode
+    cache_abs = abstract_cache(model, shape)
+    cshard = shd.axes_to_shardings(model.cache_spec_axes(), cache_abs, mesh)
+    cache_abs = jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        cache_abs, cshard,
+    )
+    fn = jax.jit(model.decode_step, donate_argnums=(2,))
+    return fn, (params_abs, batch_abs, cache_abs), model
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    *,
+    attn_impl: str = "chunked",
+    remat: str = "full",
+    scan_layers: bool = True,
+    n_layers: Optional[int] = None,
+    rules: Optional[Dict] = None,
+    keep_hlo: bool = False,
+    accum_steps: Optional[int] = None,
+    param_rules: Optional[Dict] = None,
+    cfg_overrides: Optional[Dict] = None,
+) -> Dict[str, Any]:
+    """Lower + compile one cell; return the dry-run record."""
+    cfg = get_config(arch)
+    overrides = {}
+    if n_layers is not None:
+        overrides["n_layers"] = n_layers
+        if cfg.is_encdec:
+            overrides["enc_layers"] = n_layers
+    if (arch, shape_name) in KV_DTYPE_DEFAULTS:
+        overrides["kv_cache_dtype"] = KV_DTYPE_DEFAULTS[(arch, shape_name)]
+    if cfg_overrides:
+        overrides.update(cfg_overrides)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if accum_steps is None:
+        accum_steps = auto_accum(arch, shape)
+    eff_rules = dict(SHAPE_RULES.get(shape_name, {}))
+    eff_rules.update(rules or {})
+    # inference keeps FSDP param sharding (2D: embed x TP): replicated
+    # bf16 weights make GSPMD/scan materialize full-stack temporaries; the
+    # per-layer gather is the honest, overlappable cost (see §Perf).
+    eff_param_rules = dict(param_rules or {})
+
+    t0 = time.time()
+    with shd.override_rules(**eff_rules), shd.override_param_rules(**eff_param_rules):
+        fn, args, model = build_cell(
+            cfg, shape, mesh,
+            attn_impl=attn_impl, remat=remat, scan_layers=scan_layers,
+            accum_steps=accum_steps,
+        )
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    colls = hlo_stats.collective_stats(hlo)
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "attn_impl": attn_impl,
+        "remat": remat,
+        "scan_layers": scan_layers,
+        "accum_steps": accum_steps,
+        "kv_cache_dtype": cfg.kv_cache_dtype,
+        "n_layers": cfg.n_layers,
+        "mode": shape.mode,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "per_device": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+            "fused_bytes": hlo_stats.fused_bytes_estimate(hlo),
+            "collective_bytes": sum(v["bytes"] for v in colls.values()),
+        },
+        "collectives": colls,
+        "status": "ok",
+    }
+    if keep_hlo:
+        rec["hlo_text"] = hlo
+    return rec
+
+
+def _load(path: str) -> Dict[str, Any]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+
+
+def _key(arch, shape, mesh_name, attn):
+    return f"{arch}|{shape}|{mesh_name}|{attn}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--attn", default="chunked", choices=["naive", "chunked"])
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--out", default=RESULTS_PATH)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = lm_archs() if args.arch == "all" else [args.arch.replace("-", "_")]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = _load(args.out)
+
+    for arch in archs:
+        shape_names = (
+            list(cells(arch)) if args.shape == "all" else [args.shape]
+        )
+        for shape_name in shape_names:
+            for multi in meshes:
+                mesh_name = "2x16x16" if multi else "16x16"
+                key = _key(arch, shape_name, mesh_name, args.attn)
+                if key in results and results[key].get("status") == "ok" and not args.force:
+                    print(f"[skip] {key}")
+                    continue
+                print(f"[cell] {key} ...", flush=True)
+                try:
+                    rec = run_cell(
+                        arch, shape_name, multi,
+                        attn_impl=args.attn, remat=args.remat,
+                    )
+                except Exception as e:  # noqa: BLE001 — record the failure
+                    rec = {
+                        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                        "status": "error", "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-2000:],
+                    }
+                    print(f"[FAIL] {key}: {rec['error']}")
+                else:
+                    pd = rec["per_device"]
+                    print(
+                        f"[ok]   {key}: compile={rec['compile_s']}s "
+                        f"peak={pd['peak_bytes']/2**30:.2f}GiB "
+                        f"flops={pd['flops']:.3g} coll={pd['collective_bytes']:.3g}B"
+                    )
+                results[key] = rec
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

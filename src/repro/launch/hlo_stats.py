@@ -1,0 +1,150 @@
+"""HLO text statistics: collective bytes, op census, remat duplication.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+compiled per-device HLO module: for every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute we sum the *result* buffer
+sizes (per-shard bytes actually crossing links on this device, counting each
+async start/done pair once).
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+# e.g.  %ar = (f32[128]{0}, f32[64,8]{1,0}) all-reduce-start(...)
+_OP_RE = re.compile(
+    r"=\s*(.*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per collective kind: {count, bytes} (result-buffer bytes, per device)."""
+    out: Dict[str, Dict[str, float]] = {
+        k: {"count": 0, "bytes": 0} for k in COLLECTIVES
+    }
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        result_types, kind, suffix = m.group(1), m.group(2), m.group(3)
+        if suffix == "-done":
+            continue  # counted at -start
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += _shape_bytes(result_types)
+    return out
+
+
+def total_collective_bytes(hlo_text: str) -> float:
+    return sum(v["bytes"] for v in collective_stats(hlo_text).values())
+
+
+def op_census(hlo_text: str, ops=("dot", "convolution", "fusion")) -> Counter:
+    c: Counter = Counter()
+    for op in ops:
+        c[op] = len(re.findall(rf"= [^=]*?\b{op}\(", hlo_text))
+    return c
+
+
+# Opcodes whose operands/results genuinely move through HBM on a fused TPU
+# pipeline.  Elementwise chains are assumed fused away (XLA-CPU leaves them
+# unfused, which makes raw `bytes accessed` a ~5-10x over-estimate of TPU
+# HBM traffic).
+_MEMORY_OPS = (
+    "dot", "convolution", "fusion", "custom-call",
+    "gather", "scatter", "dynamic-slice", "dynamic-update-slice",
+    "reduce", "reduce-window", "sort", "concatenate", "copy", "transpose",
+)
+_OPCODE_RE = re.compile(
+    r"=\s*(?:\([^()]*\)|\S+)\s*([a-z][a-z0-9-]*)\("
+)
+
+
+def _literals(line: str):
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(line):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append(n * _DTYPE_BYTES[dtype])
+    return out
+
+
+def fused_bytes_estimate(hlo_text: str) -> float:
+    """TPU-fusion-aware HBM-traffic estimate.
+
+    Sums the bytes that genuinely cross HBM per opcode class, assuming
+    (i) elementwise chains fuse away (XLA-CPU leaves them unfused, making
+    raw `bytes accessed` a ~5-10x over-estimate) and (ii) scatter /
+    dynamic-update-slice execute in place (touched rows only, not a full
+    buffer rewrite).  Loop bodies count once; callers extrapolate.
+    Per line, literal[0] is the result type, the rest are operand types.
+    """
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = _OPCODE_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        base = op.replace("-start", "").replace("-done", "")
+        if base in COLLECTIVES or op.endswith("-done"):
+            continue  # collectives live in their own roofline term
+        lits = _literals(line)
+        if not lits:
+            continue
+        res, ops_ = lits[0], lits[1:]
+        if base in ("dot", "convolution", "fusion", "custom-call",
+                    "sort", "concatenate", "reduce-window"):
+            total += res + sum(ops_)
+        elif base in ("transpose", "dynamic-slice", "reverse"):
+            total += 2 * res
+        elif base == "copy":
+            # XLA-CPU bufferization copies (around in-place scatter, loop
+            # carries, donation): elided or absorbed on TPU — excluded; the
+            # unfused `bytes accessed` upper bound still includes them.
+            continue
+        elif base == "gather":
+            # read gathered rows + indices, write result
+            total += 2 * res + (ops_[1] if len(ops_) > 1 else 0)
+        elif base == "scatter":
+            # in place: read+write touched rows (~updates), read indices
+            upd = ops_[-1] if ops_ else 0
+            idx = ops_[1] if len(ops_) > 2 else 0
+            total += 2 * upd + idx
+        elif base == "dynamic-update-slice":
+            upd = ops_[1] if len(ops_) > 1 else 0
+            total += 2 * upd
+        elif base == "reduce":
+            total += res + (ops_[0] if ops_ else 0)
+    return float(total)

@@ -1,0 +1,96 @@
+"""Shared building blocks: norms, MLPs, embeddings."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDef
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_defs(cfg: ModelConfig, d: int | None = None) -> Dict:
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {
+            "scale": ParamDef((d,), ("embed_tp",), init="ones"),
+            "bias": ParamDef((d,), ("embed_tp",), init="zeros"),
+        }
+    return {"scale": ParamDef((d,), ("embed_tp",), init="ones")}
+
+
+def apply_norm(p: Dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if "bias" in p:
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:
+        ms = (xf * xf).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense MLP
+# ---------------------------------------------------------------------------
+
+def mlp_defs(cfg: ModelConfig) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.activation == "swiglu":
+        return {
+            "wg": ParamDef((d, f), ("embed", "mlp")),
+            "wu": ParamDef((d, f), ("embed", "mlp")),
+            "wo": ParamDef((f, d), ("mlp", "embed")),
+        }
+    return {
+        "wu": ParamDef((d, f), ("embed", "mlp")),
+        "bu": ParamDef((f,), ("mlp",), init="zeros"),
+        "wo": ParamDef((f, d), ("mlp", "embed")),
+        "bo": ParamDef((d,), ("embed_tp",), init="zeros"),
+    }
+
+
+def apply_mlp(p: Dict, x: jax.Array) -> jax.Array:
+    if "wg" in p:
+        g = jnp.einsum("...d,df->...f", x, p["wg"].astype(x.dtype))
+        u = jnp.einsum("...d,df->...f", x, p["wu"].astype(x.dtype))
+        h = jax.nn.silu(g) * u
+    else:
+        h = jnp.einsum("...d,df->...f", x, p["wu"].astype(x.dtype)) + p["bu"].astype(x.dtype)
+        h = jax.nn.gelu(h)
+    out = jnp.einsum("...f,fd->...d", h, p["wo"].astype(x.dtype))
+    if "bo" in p:
+        out = out + p["bo"].astype(x.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+# ---------------------------------------------------------------------------
+
+def pad_vocab(cfg: ModelConfig, mult: int = 2048) -> int:
+    """Pad the vocab so TP sharding divides evenly (MaxText-style)."""
+    return -(-cfg.vocab_size // mult) * mult
+
+
+def embed_defs(cfg: ModelConfig) -> Dict:
+    v = pad_vocab(cfg)
+    out = {"tok": ParamDef((v, cfg.d_model), ("vocab", "embed"), init="embed", scale=0.02)}
+    if not cfg.tie_embeddings:
+        out["head"] = ParamDef((cfg.d_model, v), ("embed", "vocab"))
+    return out
+
+
+def embed_tokens(p: Dict, tokens: jax.Array, dtype) -> jax.Array:
+    return p["tok"].astype(dtype)[tokens]
+
+
+def logits_from(p: Dict, x: jax.Array) -> jax.Array:
+    if "head" in p:
+        return jnp.einsum("...d,dv->...v", x, p["head"].astype(x.dtype))
+    return jnp.einsum("...d,vd->...v", x, p["tok"].astype(x.dtype))

@@ -1,0 +1,134 @@
+"""Mamba2 (SSD) block — used by zamba2's backbone.
+
+Chunk-parallel selective state space: per-head scalar decay
+``a_t = exp(-exp(A_log) * dt_t)`` feeding the shared
+:mod:`repro.models.linear_scan` machinery with q=C, k=B, v=dt*x.
+Includes the depthwise causal conv on (x, B, C), gated RMS norm, and the
+D skip connection.  Decode keeps (conv_state, ssd_state) per layer.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constraint
+from repro.models.linear_scan import chunked_decay_attention, decay_attention_step
+from repro.models.params import ParamDef
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array   # (B, K-1, conv_dim)
+    ssd: jax.Array    # (B, H, n_state, head_dim)
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    conv_dim = d_in + 2 * cfg.ssm_state
+    return d_in, H, cfg.ssm_head_dim, cfg.ssm_state, conv_dim
+
+
+def mamba_defs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    d_in, H, hd, ns, conv_dim = _dims(cfg)
+    return {
+        "wz": ParamDef((d, d_in), ("embed", "mlp")),
+        "wx": ParamDef((d, d_in), ("embed", "mlp")),
+        "wB": ParamDef((d, ns), ("embed", "state")),
+        "wC": ParamDef((d, ns), ("embed", "state")),
+        "wdt": ParamDef((d, H), ("embed", "heads")),
+        "dt_bias": ParamDef((H,), ("heads",), init="zeros"),
+        "A_log": ParamDef((H,), ("heads",), init="zeros"),
+        "D": ParamDef((H,), ("heads",), init="ones"),
+        "conv_w": ParamDef((cfg.ssm_conv, conv_dim), ("conv", "mlp"), init="embed", scale=0.5),
+        "norm": ParamDef((d_in,), ("mlp",), init="ones"),
+        "wo": ParamDef((d_in, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, prev: Optional[jax.Array]):
+    """Depthwise causal conv along seq; returns output + new conv state."""
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[-1]), xBC.dtype)
+    xp = jnp.concatenate([prev, xBC], axis=1)
+    out = sum(
+        xp[:, i : i + xBC.shape[1]] * w[i][None, None, :] for i in range(K)
+    )
+    new_state = xp[:, -(K - 1) :] if K > 1 else prev
+    return jax.nn.silu(out), new_state
+
+
+def apply_mamba(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,                 # (B, S, d)
+    state: Optional[MambaState] = None,
+) -> Tuple[jax.Array, Optional[MambaState]]:
+    B, S, d = x.shape
+    d_in, H, hd, ns, conv_dim = _dims(cfg)
+    dt_f = x.dtype
+
+    z = jnp.einsum("bsd,de->bse", x, p["wz"].astype(dt_f))
+    xi = jnp.einsum("bsd,de->bse", x, p["wx"].astype(dt_f))
+    Bp = jnp.einsum("bsd,dn->bsn", x, p["wB"].astype(dt_f))
+    Cp = jnp.einsum("bsd,dn->bsn", x, p["wC"].astype(dt_f))
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", x, p["wdt"].astype(dt_f)).astype(jnp.float32)
+        + p["dt_bias"]
+    )                                                           # (B,S,H)
+
+    xBC = jnp.concatenate([xi, Bp, Cp], axis=-1)
+    xBC = constraint(xBC, "batch", "seq", "mlp")
+    conv_prev = state.conv if state is not None else None
+    xBC, conv_new = _causal_conv(xBC, p["conv_w"].astype(dt_f), conv_prev)
+    xi, Bp, Cp = jnp.split(xBC, [d_in, d_in + ns], axis=-1)
+
+    xh = xi.reshape(B, S, H, hd)
+    v = xh * dt.astype(dt_f)[..., None]                          # (B,S,H,hd)
+    q = jnp.broadcast_to(Cp[:, :, None, :], (B, S, H, ns))
+    k = jnp.broadcast_to(Bp[:, :, None, :], (B, S, H, ns))
+    log_w = (-jnp.exp(p["A_log"])[None, None, :] * dt)[..., None]  # (B,S,H,1)
+    log_w = jnp.broadcast_to(log_w, (B, S, H, ns))
+    # shard the (B,S,H,*) scan tensors over heads: the f32 chunk-scan
+    # working set is the memory hot spot at zamba2 scale
+    v = constraint(v, "batch", "seq", "heads", None)
+    q = constraint(q, "batch", "seq", "heads", None)
+    k = constraint(k, "batch", "seq", "heads", None)
+    log_w = constraint(log_w, "batch", "seq", "heads", None)
+
+    ssd_prev = state.ssd if state is not None else None
+    if S == 1 and state is not None:
+        y1, ssd_new = decay_attention_step(
+            q[:, 0], k[:, 0], v[:, 0], log_w[:, 0], ssd_prev
+        )
+        y = y1[:, None]
+    else:
+        y, ssd_new = chunked_decay_attention(
+            q, k, v, log_w, initial_state=ssd_prev, return_state=True
+        )
+    y = y + p["D"].astype(dt_f)[None, None, :, None] * xh
+    y = y.reshape(B, S, d_in)
+
+    # gated RMS norm then out-projection
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt((yf * yf).mean(-1, keepdims=True) + 1e-6)
+    y = (yf * p["norm"]).astype(dt_f) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(dt_f))
+    out = constraint(out, "batch", "seq_res", None)
+
+    new_state = (
+        MambaState(conv=conv_new, ssd=ssd_new) if state is not None else None
+    )
+    return out, new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> MambaState:
+    d_in, H, hd, ns, conv_dim = _dims(cfg)
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        ssd=jnp.zeros((batch, H, ns, hd), jnp.float32),
+    )

@@ -1,0 +1,162 @@
+"""RWKV6 "Finch" block: token-shift time-mix with data-dependent per-channel
+decay (LoRA-modulated) + bonus, and the squared-ReLU channel-mix FFN.
+
+The wkv recurrence is the ``bonus`` variant of
+:mod:`repro.models.linear_scan`; decode carries (shift_tm, shift_cm, wkv)
+states per layer — O(1) in sequence length, which is why rwkv6-7b runs the
+``long_500k`` cell.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constraint
+from repro.models.linear_scan import chunked_decay_attention, decay_attention_step
+from repro.models.params import ParamDef
+
+LORA_R = 64
+
+
+class RwkvState(NamedTuple):
+    shift_tm: jax.Array    # (B, d) last input to time-mix
+    shift_cm: jax.Array    # (B, d) last input to channel-mix
+    wkv: jax.Array         # (B, H, hd, hd)
+
+
+def _heads(cfg: ModelConfig) -> Tuple[int, int]:
+    hd = cfg.ssm_head_dim
+    return cfg.d_model // hd, hd
+
+
+def time_mix_defs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    H, hd = _heads(cfg)
+    return {
+        "mu_r": ParamDef((d,), ("embed_tp",), init="zeros"),
+        "mu_k": ParamDef((d,), ("embed_tp",), init="zeros"),
+        "mu_v": ParamDef((d,), ("embed_tp",), init="zeros"),
+        "mu_g": ParamDef((d,), ("embed_tp",), init="zeros"),
+        "mu_w": ParamDef((d,), ("embed_tp",), init="zeros"),
+        "wr": ParamDef((d, d), ("embed", "heads")),
+        "wk": ParamDef((d, d), ("embed", "heads")),
+        "wv": ParamDef((d, d), ("embed", "heads")),
+        "wg": ParamDef((d, d), ("embed", "heads")),
+        "w0": ParamDef((d,), ("embed_tp",), init="zeros"),
+        "w_lora_a": ParamDef((d, LORA_R), ("embed", None)),
+        "w_lora_b": ParamDef((LORA_R, d), (None, "embed_tp"), init="zeros"),
+        "u": ParamDef((H, hd), ("heads", None), init="zeros"),
+        "ln_scale": ParamDef((d,), ("embed_tp",), init="ones"),
+        "wo": ParamDef((d, d), ("heads", "embed")),
+    }
+
+
+def channel_mix_defs(cfg: ModelConfig) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": ParamDef((d,), ("embed_tp",), init="zeros"),
+        "mu_r": ParamDef((d,), ("embed_tp",), init="zeros"),
+        "wk": ParamDef((d, f), ("embed", "mlp")),
+        "wv": ParamDef((f, d), ("mlp", "embed")),
+        "wr": ParamDef((d, d), ("embed", "embed_tp")),
+    }
+
+
+def _shift(x: jax.Array, prev: Optional[jax.Array]) -> jax.Array:
+    """Token shift: x_{t-1} (prev carries the last token across steps)."""
+    if prev is None:
+        pad = jnp.zeros_like(x[:, :1])
+    else:
+        pad = prev[:, None].astype(x.dtype)
+    return jnp.concatenate([pad, x[:, :-1]], axis=1)
+
+
+def apply_time_mix(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,                        # (B, S, d)
+    state: Optional[RwkvState] = None,
+) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    B, S, d = x.shape
+    H, hd = _heads(cfg)
+    dt_f = x.dtype
+
+    xs = _shift(x, state.shift_tm if state is not None else None)
+    mix = lambda mu: x + (xs - x) * mu.astype(dt_f)[None, None]
+    xr, xk, xv, xg, xw = (
+        mix(p["mu_r"]), mix(p["mu_k"]), mix(p["mu_v"]), mix(p["mu_g"]), mix(p["mu_w"])
+    )
+
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt_f)).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(dt_f)).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(dt_f)).reshape(B, S, H, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(dt_f)))
+    r = constraint(r, "batch", "seq", "heads", None)
+    k = constraint(k, "batch", "seq", "heads", None)
+    v = constraint(v, "batch", "seq", "heads", None)
+
+    # data-dependent decay (Finch): w = exp(-exp(w0 + lora(xw)))
+    lora = jnp.einsum(
+        "bsr,re->bse",
+        jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["w_lora_a"].astype(dt_f))),
+        p["w_lora_b"].astype(dt_f),
+    )
+    log_w = -jnp.exp(
+        jnp.clip(p["w0"][None, None].astype(jnp.float32) + lora.astype(jnp.float32), -8.0, 4.0)
+    ).reshape(B, S, H, hd)
+    log_w = constraint(log_w, "batch", "seq", "heads", None)
+
+    wkv_prev = state.wkv if state is not None else None
+    if S == 1 and state is not None:
+        y1, wkv_new = decay_attention_step(
+            r[:, 0], k[:, 0], v[:, 0], log_w[:, 0], wkv_prev, bonus=p["u"]
+        )
+        y = y1[:, None]
+    else:
+        y, wkv_new = chunked_decay_attention(
+            r, k, v, log_w,
+            bonus=p["u"], initial_state=wkv_prev, return_state=True,
+        )
+
+    # per-head group norm, gate, out-projection
+    yf = y.astype(jnp.float32)
+    yf = yf * jax.lax.rsqrt((yf * yf).mean(-1, keepdims=True) + 1e-6)
+    y = (yf.reshape(B, S, d) * p["ln_scale"]).astype(dt_f) * g
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(dt_f))
+    out = constraint(out, "batch", "seq_res", None)
+
+    if state is not None:
+        return out, (x[:, -1].astype(state.shift_tm.dtype), wkv_new)
+    return out, None
+
+
+def apply_channel_mix(
+    p: Dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    shift_prev: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[jax.Array]]:
+    dt_f = x.dtype
+    xs = _shift(x, shift_prev)
+    xk = x + (xs - x) * p["mu_k"].astype(dt_f)[None, None]
+    xr = x + (xs - x) * p["mu_r"].astype(dt_f)[None, None]
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(dt_f))
+    k = jnp.square(jax.nn.relu(k))
+    k = constraint(k, "batch", "seq", "mlp")
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"].astype(dt_f))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt_f)))
+    out = r * kv
+    new_shift = x[:, -1] if shift_prev is not None else None
+    return constraint(out, "batch", "seq_res", None), new_shift
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int, dtype) -> RwkvState:
+    H, hd = _heads(cfg)
+    return RwkvState(
+        shift_tm=jnp.zeros((batch, cfg.d_model), dtype),
+        shift_cm=jnp.zeros((batch, cfg.d_model), dtype),
+        wkv=jnp.zeros((batch, H, hd, hd), jnp.float32),
+    )

@@ -1,0 +1,144 @@
+"""Decode-step over the PUMA paged KV pool (dense/moe/vlm families).
+
+This is where the paper's technique meets the serving path: attention reads
+KV through the *block table* (re-mmap analogue) with the
+``repro.kernels.paged_attention`` kernel, and the new token's K/V is written
+back into pool blocks placed by the PUMA policy.
+
+The runner mirrors ``LM.decode_step`` exactly (same params, same math) with
+the dense cache swapped for (k_pool, v_pool, block_table, seq_lens); layer
+loop is unrolled (serving configs are small; the dry-run path uses the
+scanned dense-cache step).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.paged_attention import ops as paged_ops
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models.rope import apply_rope
+
+
+def paged_decode_step(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,        # (B, 1)
+    positions: jax.Array,     # (B, 1)
+    k_pool: jax.Array,        # (L, nb, bs, KV, hd)
+    v_pool: jax.Array,
+    block_tables: jax.Array,  # (B, max_blocks)
+    seq_lens: jax.Array,      # (B,) length INCLUDING the current token
+    *,
+    use_kernel: bool = True,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (logits (B, V), new_k (L, B, KV, hd), new_v (L, B, KV, hd)).
+
+    The caller scatters new_k/new_v into pool blocks (host-side PUMA
+    bookkeeping decides *which* blocks — that's the paper's policy layer).
+    Attention masks to ``seq_lens`` which already counts the current token,
+    whose K/V is injected via a one-slot overlay so the kernel sees it
+    before the host writes it back.
+    """
+    B = tokens.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dtype = jnp.dtype(cfg.dtype)
+
+    x = L.embed_tokens(params["embed"], tokens, dtype)   # (B, 1, d)
+
+    new_ks, new_vs = [], []
+    n_layers = cfg.n_layers
+    for li in range(n_layers):
+        lp = jax.tree.map(lambda a: a[li], params["layers"])
+        h = L.apply_norm(lp["ln1"], x)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"].astype(dtype))
+        k1 = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"].astype(dtype))
+        v1 = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"].astype(dtype))
+        q = apply_rope(cfg, q, positions)
+        k1 = apply_rope(cfg, k1, positions)
+
+        # overlay: extend each sequence's KV stream with the current token by
+        # appending a virtual block holding it at position seq_len-1.
+        attn_out = _paged_attention_with_current(
+            q[:, 0], k_pool[li], v_pool[li], block_tables, seq_lens,
+            k1[:, 0].astype(k_pool.dtype), v1[:, 0].astype(v_pool.dtype),
+            use_kernel=use_kernel,
+        )
+        a = jnp.einsum("bhk,hkd->bd", attn_out, lp["attn"]["wo"].astype(dtype))
+        x = x + a[:, None]
+        h = L.apply_norm(lp["ln2"], x)
+        if cfg.n_experts:
+            m, _ = MOE.apply_moe(lp["moe"], cfg, h)
+        else:
+            m = L.apply_mlp(lp["mlp"], h)
+        x = x + m
+        new_ks.append(k1[:, 0])
+        new_vs.append(v1[:, 0])
+
+    x = L.apply_norm(params["final_ln"], x)
+    logits = L.logits_from(params["embed"], x)[:, 0]
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)
+
+
+def _paged_attention_with_current(
+    q, k_pool, v_pool, block_tables, seq_lens, k_cur, v_cur, *, use_kernel
+):
+    """Attention over pooled KV plus the in-flight token.
+
+    We append one per-sequence "current" block to the pool view and extend
+    each block table with its index; masking is handled by seq_lens.  The
+    current token sits at position ceil: we place it in a dedicated block at
+    offset (seq_len-1) % block_size of a scratch block filled at that slot.
+    For simplicity and exactness, scratch blocks hold ONLY the current token
+    at slot 0 and the table entry is appended with an adjusted... — instead
+    we take the simpler exact route: compute attention over pool (lengths
+    seq_len-1) and merge the current token analytically.
+    """
+    B, H, hd = q.shape
+    KV = k_pool.shape[2]
+    scale = hd ** -0.5
+    group = H // KV
+
+    # past contribution (lengths exclude the current token)
+    past_len = seq_lens - 1
+    out_past = paged_ops.paged_attention(
+        q, k_pool, v_pool, block_tables, past_len,
+        scale=scale, use_kernel=use_kernel,
+    )                                                     # (B, H, hd)
+
+    # merge current token: softmax over [past, current] decomposes into
+    # weighted average of past attention output and v_cur.
+    qg = q.reshape(B, KV, group, hd).astype(jnp.float32)
+    s_cur = jnp.einsum("bkgd,bkd->bkg", qg, k_cur.astype(jnp.float32)) * scale
+
+    # recompute the past logsumexp (cheap second pass over logits only)
+    lse_past = _paged_lse(q, k_pool, block_tables, past_len, scale)  # (B,KV,group)
+    has_past = (past_len > 0)[:, None, None]
+    m = jnp.maximum(jnp.where(has_past, lse_past, -jnp.inf), s_cur)
+    w_past = jnp.where(has_past, jnp.exp(lse_past - m), 0.0)
+    w_cur = jnp.exp(s_cur - m)
+    denom = w_past + w_cur
+    out = (
+        out_past.reshape(B, KV, group, hd).astype(jnp.float32) * w_past[..., None]
+        + v_cur.astype(jnp.float32)[:, :, None, :] * w_cur[..., None]
+    ) / denom[..., None]
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def _paged_lse(q, k_pool, block_tables, seq_lens, scale):
+    """log-sum-exp of past attention logits, via the jnp gather path."""
+    B, H, hd = q.shape
+    nb, bs, KV, _ = k_pool.shape
+    group = H // KV
+    idx = jnp.maximum(block_tables, 0)
+    k = k_pool[idx].reshape(B, -1, KV, hd)                 # (B, S, KV, hd)
+    qg = q.reshape(B, KV, group, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k.astype(jnp.float32)) * scale
+    pos = jnp.arange(s.shape[-1])[None, None, None, :]
+    s = jnp.where(pos < seq_lens[:, None, None, None], s, -jnp.inf)
+    return jax.nn.logsumexp(s, axis=-1)                    # (B, KV, group)

@@ -1,0 +1,82 @@
+"""The paper's §1 observations + allocator model invariants."""
+import numpy as np
+import pytest
+
+from repro.core.allocators import (
+    HUGE_PAGE,
+    HugePageModel,
+    MallocModel,
+    PhysicalMemory,
+    PosixMemalignModel,
+)
+from repro.core.dram import AddressMap
+from repro.core.puma import PumaAllocator
+from repro.core import pud
+
+AMAP = AddressMap()
+SIZES_BITS = [2_000, 32_000, 512_000, 6_000_000]
+
+
+def _fraction(mk_alloc, size, op="and", nops=3, reps=10):
+    fr = []
+    for rep in range(reps):
+        mem = PhysicalMemory(AMAP, seed=rep)
+        al = mk_alloc(mem)
+        ops = [al.alloc(size) for _ in range(nops)]
+        fr.append(pud.plan_rows(op, ops, AMAP).pud_fraction)
+    return float(np.mean(fr))
+
+
+@pytest.mark.parametrize("bits", SIZES_BITS)
+def test_malloc_zero_percent(bits):
+    """Paper obs (i): malloc -> 0% PUD-executable at every size."""
+    assert _fraction(lambda m: MallocModel(m), bits // 8) == 0.0
+
+
+@pytest.mark.parametrize("bits", SIZES_BITS)
+def test_posix_memalign_zero_percent(bits):
+    """Paper obs (i): posix_memalign -> 0% (virtually aligned only)."""
+    assert _fraction(lambda m: PosixMemalignModel(m), bits // 8) == 0.0
+
+
+def test_hugepage_partial():
+    """Paper obs (ii): huge pages cap out well below 100% ("up to 60%")."""
+    for bits in [32_000, 512_000, 6_000_000]:
+        f = _fraction(lambda m: HugePageModel(m, "mmap"), bits // 8)
+        assert 0.0 < f <= 0.75, (bits, f)
+
+
+def test_puma_full():
+    """PUMA: ~100% at every size (pim_alloc + pim_alloc_align)."""
+    for bits in SIZES_BITS:
+        size = max(1, bits // 8)
+        mem = PhysicalMemory(AMAP, seed=0)
+        pa = PumaAllocator(mem)
+        pa.pim_preallocate(64)
+        A = pa.pim_alloc(size)
+        B = pa.pim_alloc_align(size, A)
+        C = pa.pim_alloc_align(size, A)
+        plan = pud.plan_rows("and", [A, B, C], AMAP)
+        assert plan.pud_fraction == 1.0, (bits, plan.pud_fraction)
+
+
+def test_allocations_dont_overlap_physically():
+    mem = PhysicalMemory(AMAP, seed=3)
+    allocs = []
+    for mk in (MallocModel(mem), PosixMemalignModel(mem), HugePageModel(mem)):
+        allocs.extend(mk.alloc(50_000) for _ in range(4))
+    pa = PumaAllocator(mem)
+    pa.pim_preallocate(16)
+    allocs.extend(pa.pim_alloc(50_000) for _ in range(4))
+    claimed = set()
+    for a in allocs:
+        for e in a.extents:
+            rng = (e.pa, e.pa + e.nbytes)
+            for lo, hi in claimed:
+                assert rng[1] <= lo or rng[0] >= hi, "physical overlap"
+            claimed.add(rng)
+
+
+def test_hugepage_heap_small_sizes_fail_row_alignment():
+    f = _fraction(lambda m: HugePageModel(m, "heap"), 250)
+    assert f == 0.0

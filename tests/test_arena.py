@@ -1,0 +1,103 @@
+"""TilePool (TPU arena allocator) invariants + policy quality."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.arena import TilePool
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.integers(1, 40), st.booleans()),
+        min_size=1, max_size=30,
+    ),
+    st.sampled_from(["puma", "first_fit", "random"]),
+    st.randoms(use_true_random=False),
+)
+def test_no_tile_double_booked(ops, policy, rnd):
+    pool = TilePool(8, 32, policy=policy)
+    live = []
+    for n, do_free in ops:
+        if do_free and live:
+            pool.free(live.pop(rnd.randrange(len(live))))
+        else:
+            h = pool.alloc(n)
+            if h is not None:
+                live.append(h)
+        tiles = [t for h in live for t in h.tiles]
+        assert len(tiles) == len(set(tiles)), "tile double-booked"
+        assert all(0 <= t < pool.total_tiles for t in tiles)
+        assert pool.free_tiles() + len(tiles) == pool.total_tiles
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 16), st.integers(1, 16))
+def test_alloc_align_mirrors_arenas_when_space(n1, n2):
+    # both fit in half an arena -> the hinted arena always has room, so
+    # alignment must be exact (paper §2 "Aligned Allocation" steps 2-3)
+    pool = TilePool(8, 32, policy="puma")
+    a = pool.alloc(n1)
+    b = pool.alloc_align(n2, a)
+    arena = lambda t: t // pool.tiles_per_arena
+    for k in range(min(n1, n2)):
+        assert arena(a.tiles[k]) == arena(b.tiles[k])
+    assert pool.stats.align_misses == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(17, 32), st.integers(17, 32))
+def test_alloc_align_falls_back_worst_fit(n1, n2):
+    # hint consumes >half its arena: the overflow of the aligned allocation
+    # must fall back to worst-fit (misses recorded), never fail
+    pool = TilePool(8, 32, policy="puma")
+    a = pool.alloc(n1)
+    b = pool.alloc_align(n2, a)
+    assert b is not None and len(b.tiles) == n2
+    hits, misses = pool.stats.align_hits, pool.stats.align_misses
+    assert hits + misses >= n2
+    assert misses >= max(0, n1 + n2 - pool.tiles_per_arena) - (n2 - min(n1, n2))
+
+
+def test_extend_prefers_adjacent_slot():
+    pool = TilePool(4, 64, policy="puma")
+    h = pool.alloc(5)
+    assert pool.extend(h, 3)
+    assert h.contiguous_run_fraction() == 1.0
+
+
+def test_align_fails_for_dead_hint():
+    pool = TilePool(4, 16, policy="puma")
+    h = pool.alloc(4)
+    pool.free(h)
+    assert pool.alloc_align(4, h) is None
+
+
+def test_puma_beats_baselines_under_churn():
+    def run(policy):
+        pool = TilePool(16, 64, policy=policy, seed=0)
+        rng = np.random.default_rng(0)
+        live = []
+        fr = []
+        for step in range(300):
+            if live and rng.random() < 0.4:
+                pool.free(live.pop(rng.integers(len(live))))
+            h = pool.alloc(int(rng.integers(2, 24)))
+            if h is not None:
+                live.append(h)
+            for h in live:
+                if rng.random() < 0.5:
+                    pool.extend(h, 1)
+        return float(np.mean([h.contiguous_run_fraction() for h in live]))
+
+    puma = run("puma")
+    ff = run("first_fit")
+    rnd = run("random")
+    assert puma > ff and puma > rnd, (puma, ff, rnd)
+
+
+def test_exhaustion_returns_none():
+    pool = TilePool(2, 4, policy="puma")
+    assert pool.alloc(9) is None
+    assert pool.alloc(8) is not None
+    assert pool.alloc(1) is None

@@ -1,0 +1,77 @@
+import pytest
+
+from repro.core.dram import (
+    AddressMap,
+    BANK_REGION_SCHEME,
+    CACHELINE_INTERLEAVED_SCHEME,
+    DramGeometry,
+    InterleaveScheme,
+)
+
+
+def test_default_geometry_matches_paper():
+    geo = DramGeometry()
+    # paper: 8 GB system, 1024x1024 subarray = 1 MB
+    assert geo.total_bytes == 8 * 2**30
+    assert geo.subarray_bytes == 2**20
+    assert geo.rows_per_subarray == 1024
+
+
+@pytest.mark.parametrize("scheme", [BANK_REGION_SCHEME, CACHELINE_INTERLEAVED_SCHEME])
+def test_decode_fields_in_range(scheme):
+    amap = AddressMap(scheme=scheme)
+    geo = amap.geo
+    for pa in [0, 4096, 2**20 + 512, geo.total_bytes - 1, 123456789]:
+        c = amap.decode(pa)
+        assert 0 <= c.channel < geo.channels
+        assert 0 <= c.bank < geo.banks_per_rank
+        assert 0 <= c.subarray < geo.subarrays_per_bank
+        assert 0 <= c.row < geo.rows_per_subarray
+        assert 0 <= c.col < geo.row_bytes
+
+
+@pytest.mark.parametrize("scheme", [BANK_REGION_SCHEME, CACHELINE_INTERLEAVED_SCHEME])
+def test_decode_is_bijective_over_regions(scheme):
+    amap = AddressMap(scheme=scheme)
+    seen = set()
+    rb = amap.region_bytes
+    for r in range(0, 4096):
+        c = amap.decode(r * rb)
+        key = (c.channel, c.rank, c.bank, c.subarray, c.row, c.col)
+        assert key not in seen
+        seen.add(key)
+
+
+def test_region_subarray_constant_within_region_bank_scheme():
+    amap = AddressMap(scheme=BANK_REGION_SCHEME)
+    rb = amap.region_bytes
+    for base in [0, rb * 7, rb * 1023, rb * 5000]:
+        ids = {
+            amap.decode(base + off).global_subarray(amap.geo)
+            for off in range(0, rb, 97)
+        }
+        assert len(ids) == 1
+
+
+def test_regions_in_range_alignment():
+    amap = AddressMap()
+    rb = amap.region_bytes
+    regions = amap.regions_in_range(rb // 2, 10 * rb)
+    # first partial region excluded; all returned PAs aligned
+    assert all(pa % rb == 0 for pa, _ in regions)
+    assert len(regions) == 9
+
+
+def test_xor_scheme_decodes():
+    scheme = InterleaveScheme(
+        order=CACHELINE_INTERLEAVED_SCHEME.order, xor_row_into_bank=True
+    )
+    amap = AddressMap(scheme=scheme)
+    # still bijective at region granularity
+    ids = {amap.region_subarray(r * amap.region_bytes) for r in range(2048)}
+    assert len(ids) > 1
+
+
+def test_non_pow2_geometry_rejected():
+    with pytest.raises(ValueError):
+        DramGeometry(channels=3)

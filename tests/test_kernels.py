@@ -1,0 +1,106 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode): shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.pud_bulk import ops as pud_ops
+from repro.kernels.flash_attention import ops as fl_ops
+from repro.kernels.paged_attention import ops as pg_ops
+
+RNG = np.random.default_rng(0)
+
+
+# -- pud_bulk -----------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [np.int32, np.uint32, np.int8])
+@pytest.mark.parametrize("shape", [(8, 128), (100,), (3, 5, 7), (1000, 3)])
+def test_pud_bulk_elementwise(dtype, shape):
+    x = jnp.asarray(RNG.integers(0, 127, size=shape).astype(dtype))
+    y = jnp.asarray(RNG.integers(0, 127, size=shape).astype(dtype))
+    z = jnp.asarray(RNG.integers(0, 127, size=shape).astype(dtype))
+    for fn, args in [
+        (pud_ops.pud_zero, (x,)), (pud_ops.pud_copy, (x,)),
+        (pud_ops.pud_not, (x,)), (pud_ops.pud_and, (x, y)),
+        (pud_ops.pud_or, (x, y)), (pud_ops.pud_xor, (x, y)),
+        (pud_ops.pud_maj, (x, y, z)),
+    ]:
+        k = fn(*args, use_kernel=True)
+        r = fn(*args, use_kernel=False)
+        np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+
+
+@pytest.mark.parametrize("nb,elems,npairs", [(16, 32, 4), (8, 256, 3), (32, 48, 1)])
+def test_pud_block_copy(nb, elems, npairs):
+    pool = jnp.asarray(RNG.integers(0, 100, size=(nb, elems)).astype(np.int32))
+    perm = RNG.permutation(nb)
+    src = jnp.asarray(perm[:npairs].astype(np.int32))
+    dst = jnp.asarray(perm[npairs : 2 * npairs].astype(np.int32))
+    k = pud_ops.pool_block_copy(pool, src, dst, use_kernel=True)
+    r = pud_ops.pool_block_copy(pool, src, dst, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(k), np.asarray(r))
+
+
+# -- flash attention ----------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,Sq,Sk,D,causal,dtype",
+    [
+        (2, 4, 2, 64, 64, 32, True, jnp.float32),
+        (1, 8, 1, 100, 100, 64, True, jnp.float32),
+        (2, 4, 4, 32, 96, 80, False, jnp.float32),
+        (1, 2, 2, 1, 200, 128, False, jnp.float32),
+        (1, 4, 2, 128, 128, 64, True, jnp.bfloat16),
+        (1, 48, 1, 33, 33, 128, True, jnp.float32),   # MQA, ragged seq
+    ],
+)
+def test_flash_attention_matches_ref(B, Hq, Hkv, Sq, Sk, D, causal, dtype):
+    q = jnp.asarray(RNG.normal(size=(B, Hq, Sq, D)), dtype)
+    k = jnp.asarray(RNG.normal(size=(B, Hkv, Sk, D)), dtype)
+    v = jnp.asarray(RNG.normal(size=(B, Hkv, Sk, D)), dtype)
+    out_k = fl_ops.flash_attention(q, k, v, causal=causal, use_kernel=True)
+    out_r = fl_ops.flash_attention(q, k, v, causal=causal, use_kernel=False)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    err = float(jnp.max(jnp.abs(out_k.astype(jnp.float32) - out_r.astype(jnp.float32))))
+    assert err < tol, err
+
+
+# -- paged attention ----------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,D,nb,bs,maxb",
+    [(2, 8, 2, 64, 32, 16, 6), (1, 4, 4, 128, 16, 8, 4), (3, 16, 1, 32, 64, 16, 8)],
+)
+def test_paged_attention_matches_ref(B, Hq, Hkv, D, nb, bs, maxb):
+    q = jnp.asarray(RNG.normal(size=(B, Hq, D)), jnp.float32)
+    kp = jnp.asarray(RNG.normal(size=(nb, bs, Hkv, D)), jnp.float32)
+    vp = jnp.asarray(RNG.normal(size=(nb, bs, Hkv, D)), jnp.float32)
+    lens = RNG.integers(1, maxb * bs, size=(B,))
+    tbl = np.full((B, maxb), -1, np.int32)
+    for b in range(B):
+        need = -(-int(lens[b]) // bs)
+        tbl[b, :need] = RNG.choice(nb, size=need, replace=False)
+    tbl = jnp.asarray(tbl)
+    lens = jnp.asarray(lens.astype(np.int32))
+    ok = pg_ops.paged_attention(q, kp, vp, tbl, lens, use_kernel=True)
+    rf = pg_ops.paged_attention(q, kp, vp, tbl, lens, use_kernel=False)
+    err = float(jnp.max(jnp.abs(ok - rf)))
+    assert err < 2e-5, err
+
+
+def test_flash_vs_model_attention_impls():
+    """naive / chunked / pallas must agree on the same inputs."""
+    from repro.models.attention import _inner_attention
+
+    B, S, H, D = 2, 65, 4, 32
+    q = jnp.asarray(RNG.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(B, S, H, D)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, S, H, D)), jnp.float32)
+    outs = {}
+    for impl in ["naive", "chunked", "pallas"]:
+        outs[impl] = _inner_attention(
+            q, k, v, impl=impl, causal=True, kv_len=S, scale=D**-0.5
+        )
+    for impl in ["chunked", "pallas"]:
+        err = float(jnp.max(jnp.abs(outs[impl] - outs["naive"])))
+        assert err < 3e-5, (impl, err)

@@ -1,0 +1,74 @@
+"""Paged KV pool: lifecycle, block tables, fork alignment, KV round-trip."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kv_pool import KVPoolConfig, PagedKVPool
+
+
+def mk(policy="puma", **kw):
+    cfg = KVPoolConfig(
+        num_blocks=64, block_size=4, kv_heads=2, head_dim=8, n_layers=2,
+        max_seqs=8, max_blocks_per_seq=16, blocks_per_arena=16,
+        policy=policy, dtype="float32", **kw,
+    )
+    return PagedKVPool(cfg)
+
+
+def test_admit_release_cycle():
+    p = mk()
+    slots = [p.admit(10) for _ in range(4)]
+    assert all(s is not None for s in slots)
+    tbl = p.block_table()
+    for s in slots:
+        assert (tbl[s] >= 0).sum() == 3  # ceil(10/4)
+    for s in slots:
+        p.release(s)
+    assert p.pool.free_tiles() == p.pool.total_tiles
+
+
+def test_append_token_extends_blocks():
+    p = mk()
+    s = p.admit(4)          # exactly one block
+    assert (p.block_table()[s] >= 0).sum() == 1
+    p.append_token(s)       # 5th token -> new block
+    assert (p.block_table()[s] >= 0).sum() == 2
+    assert p.seq_lens()[s] == 5
+
+
+def test_fork_mirrors_parent_arenas():
+    p = mk()
+    s = p.admit(20)  # 5 blocks: parent + fork both fit one 16-block arena
+    f = p.fork(s)
+    tbl = p.block_table()
+    arena = lambda b: b // p.cfg.blocks_per_arena
+    pb = tbl[s][tbl[s] >= 0]
+    fb = tbl[f][tbl[f] >= 0]
+    assert len(pb) == len(fb)
+    assert [arena(b) for b in pb] == [arena(b) for b in fb]
+
+
+def test_kv_roundtrip():
+    p = mk()
+    s = p.admit(10)
+    k = jnp.arange(10 * 2 * 8, dtype=jnp.float32).reshape(10, 2, 8)
+    v = -k
+    p.write_prompt_kv(s, 1, k, v)
+    tbl = p.block_table()[s]
+    blocks = tbl[tbl >= 0]
+    got_k = np.asarray(p.k[1, blocks]).reshape(-1, 2, 8)[:10]
+    np.testing.assert_allclose(got_k, np.asarray(k))
+    # single-token write at position 10
+    p.append_token(s)
+    k1 = jnp.full((2, 8), 7.0)
+    p.write_token_kv(s, 1, k1, -k1)
+    tbl = p.block_table()[s]
+    blocks = tbl[tbl >= 0]
+    got = np.asarray(p.k[1, blocks]).reshape(-1, 2, 8)[10]
+    np.testing.assert_allclose(got, 7.0)
+
+
+def test_pool_exhaustion_rejects_admit():
+    p = mk()
+    got = [p.admit(64 * 4 // 2) for _ in range(3)]  # each takes half the pool
+    assert got[0] is not None and got[1] is not None and got[2] is None

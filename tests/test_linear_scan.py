@@ -1,0 +1,77 @@
+"""Chunked decay linear attention vs sequential oracle (hypothesis sweeps)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.linear_scan import (
+    chunked_decay_attention,
+    decay_attention_ref,
+    decay_attention_step,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def _mk(B, S, H, dk, dv, decay_scale=0.3, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, S, H, dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, dk)) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, dv)), jnp.float32)
+    lw = jnp.asarray(-np.abs(rng.normal(size=(B, S, H, dk))) * decay_scale, jnp.float32)
+    return q, k, v, lw
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(1, 3), st.integers(1, 80), st.integers(1, 3),
+    st.integers(1, 24), st.integers(1, 24), st.booleans(), st.integers(0, 99),
+)
+def test_chunked_matches_sequential(B, S, H, dk, dv, use_bonus, seed):
+    q, k, v, lw = _mk(B, S, H, dk, dv, seed=seed)
+    bonus = (
+        jnp.asarray(np.random.default_rng(seed).normal(size=(H, dk)) * 0.2, jnp.float32)
+        if use_bonus else None
+    )
+    yc, Sc = chunked_decay_attention(q, k, v, lw, bonus=bonus, return_state=True)
+    yr, Sr = decay_attention_ref(q, k, v, lw, bonus=bonus, return_state=True)
+    assert float(jnp.max(jnp.abs(yc - yr))) < 2e-3
+    assert float(jnp.max(jnp.abs(Sc - Sr))) < 2e-3
+
+
+def test_initial_state_carries():
+    q, k, v, lw = _mk(1, 40, 2, 8, 8)
+    # full pass == two half passes chaining the state
+    y_full, S_full = chunked_decay_attention(q, k, v, lw, return_state=True)
+    y1, S1 = chunked_decay_attention(
+        q[:, :20], k[:, :20], v[:, :20], lw[:, :20], return_state=True
+    )
+    y2, S2 = chunked_decay_attention(
+        q[:, 20:], k[:, 20:], v[:, 20:], lw[:, 20:],
+        initial_state=S1, return_state=True,
+    )
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], axis=1)),
+        np.asarray(y_full), atol=2e-3,
+    )
+    np.testing.assert_allclose(np.asarray(S2), np.asarray(S_full), atol=2e-3)
+
+
+def test_decode_step_matches_prefill_tail():
+    """Prefill S tokens == prefill S-1 then one decode step."""
+    q, k, v, lw = _mk(2, 17, 2, 8, 8)
+    for bonus in [None, jnp.asarray(RNG.normal(size=(2, 8)) * 0.2, jnp.float32)]:
+        y_full, S_full = chunked_decay_attention(
+            q, k, v, lw, bonus=bonus, return_state=True
+        )
+        _, S_head = chunked_decay_attention(
+            q[:, :-1], k[:, :-1], v[:, :-1], lw[:, :-1],
+            bonus=bonus, return_state=True,
+        )
+        y1, S1 = decay_attention_step(
+            q[:, -1], k[:, -1], v[:, -1], lw[:, -1], S_head, bonus=bonus
+        )
+        np.testing.assert_allclose(
+            np.asarray(y1), np.asarray(y_full[:, -1]), atol=2e-3
+        )
+        np.testing.assert_allclose(np.asarray(S1), np.asarray(S_full), atol=2e-3)

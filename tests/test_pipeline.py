@@ -1,0 +1,49 @@
+"""Data pipeline: determinism, packing masks, prefetch iterator."""
+import numpy as np
+
+from repro.data.pipeline import DataConfig, DataIterator, synth_batch
+
+
+CFG = DataConfig(vocab_size=1000, seq_len=128, batch_per_shard=4)
+
+
+def test_deterministic_addressing():
+    a = synth_batch(CFG, step=7, dp_rank=3)
+    b = synth_batch(CFG, step=7, dp_rank=3)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k])
+
+
+def test_shards_differ():
+    a = synth_batch(CFG, step=7, dp_rank=0)
+    b = synth_batch(CFG, step=7, dp_rank=1)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+    c = synth_batch(CFG, step=8, dp_rank=0)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_targets_shifted():
+    a = synth_batch(CFG, step=0, dp_rank=0)
+    # within a doc (mask==1), target == next token
+    tok, tgt, mask = a["tokens"], a["targets"], a["loss_mask"]
+    inside = mask[:, :-1] == 1.0
+    np.testing.assert_array_equal(
+        tgt[:, :-1][inside], tok[:, 1:][inside]
+    )
+
+
+def test_boundary_masked():
+    cfg = DataConfig(vocab_size=1000, seq_len=128, batch_per_shard=4,
+                     mean_doc_len=32)  # short docs: boundaries within a row
+    a = synth_batch(cfg, step=3, dp_rank=0)
+    assert (a["loss_mask"] == 0.0).sum() > 0  # some doc boundaries exist
+    assert a["tokens"].min() >= 0 and a["tokens"].max() < cfg.vocab_size
+
+
+def test_iterator_resumes_at_step():
+    it = DataIterator(CFG, dp_rank=0, start_step=5)
+    step, batch = next(it)
+    it.close()
+    assert step == 5
+    ref = synth_batch(CFG, 5, 0)
+    np.testing.assert_array_equal(batch["tokens"], ref["tokens"])

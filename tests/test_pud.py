@@ -1,0 +1,125 @@
+"""PUD executability planning + functional execution vs numpy oracle."""
+import numpy as np
+import pytest
+
+from repro.core.allocators import HugePageModel, MallocModel, PhysicalMemory
+from repro.core.dram import AddressMap, DramGeometry
+from repro.core.puma import PumaAllocator
+from repro.core import pud
+
+# Full-size map for the planning/speedup tests.
+AMAP = AddressMap()
+# Small 128 MB geometry so the functional tests can hold real phys memory.
+SMALL = AddressMap(DramGeometry(subarrays_per_bank=16))
+
+
+def _write(phys, alloc, data):
+    for e in alloc.extents:
+        n = min(e.nbytes, alloc.size - e.va_off)
+        if n > 0:
+            phys[e.pa : e.pa + n] = data[e.va_off : e.va_off + n]
+
+
+def _read(phys, alloc):
+    out = np.zeros(alloc.size, np.uint8)
+    for e in alloc.extents:
+        n = min(e.nbytes, alloc.size - e.va_off)
+        if n > 0:
+            out[e.va_off : e.va_off + n] = phys[e.pa : e.pa + n]
+    return out
+
+
+@pytest.mark.parametrize("op", ["zero", "copy", "and", "or", "not"])
+@pytest.mark.parametrize("alloc_kind", ["malloc", "huge", "puma"])
+def test_execute_matches_numpy(op, alloc_kind):
+    size = 3 * SMALL.region_bytes + 123
+    mem = PhysicalMemory(SMALL, seed=1, n_huge_pages=16, occupancy=0.1)
+    n_ops = pud.N_OPERANDS[op]
+    if alloc_kind == "malloc":
+        al = MallocModel(mem)
+        operands = [al.alloc(size) for _ in range(n_ops)]
+    elif alloc_kind == "huge":
+        al = HugePageModel(mem)
+        operands = [al.alloc(size) for _ in range(n_ops)]
+    else:
+        al = PumaAllocator(mem)
+        al.pim_preallocate(8)
+        operands = [al.pim_alloc(size)]
+        while len(operands) < n_ops:
+            operands.append(al.pim_alloc_align(size, operands[0]))
+
+    phys = np.random.default_rng(0).integers(
+        0, 256, SMALL.total_bytes, dtype=np.uint8
+    )
+    srcs = [
+        np.random.default_rng(i + 1).integers(0, 256, size, dtype=np.uint8)
+        for i in range(n_ops)
+    ]
+    for a, data in zip(operands, srcs):
+        _write(phys, a, data)
+
+    plan = pud.execute_op(op, operands, phys, SMALL)
+    got = _read(phys, operands[-1])
+
+    if op == "zero":
+        want = np.zeros(size, np.uint8)
+    elif op == "copy":
+        want = srcs[0]
+    elif op == "not":
+        want = ~srcs[0]
+    elif op == "and":
+        want = srcs[0] & srcs[1]
+    else:
+        want = srcs[0] | srcs[1]
+    np.testing.assert_array_equal(got, want)
+    if alloc_kind == "puma":
+        assert plan.pud_fraction == 1.0
+
+
+def test_speedup_grows_with_size():
+    model = pud.PudCostModel()
+    speedups = []
+    for bits in [32_000, 512_000, 6_000_000]:
+        size = bits // 8
+        mem = PhysicalMemory(AMAP, seed=0)
+        pa = PumaAllocator(mem)
+        pa.pim_preallocate(64)
+        A = pa.pim_alloc(size)
+        B = pa.pim_alloc_align(size, A)
+        C = pa.pim_alloc_align(size, A)
+        r = pud.simulate_op("and", [A, B, C], AMAP, model)
+        mem2 = PhysicalMemory(AMAP, seed=0)
+        mal = MallocModel(mem2)
+        rm = pud.simulate_op("and", [mal.alloc(size) for _ in range(3)], AMAP, model)
+        speedups.append(rm.t_ns / r.t_ns)
+    assert speedups == sorted(speedups), speedups
+    assert speedups[-1] > 3.0
+
+
+def test_adaptive_never_slower_than_cpu():
+    model = pud.PudCostModel()
+    mem = PhysicalMemory(AMAP, seed=0)
+    pa = PumaAllocator(mem)
+    pa.pim_preallocate(4)
+    A = pa.pim_alloc(100)
+    B = pa.pim_alloc_align(100, A)
+    C = pa.pim_alloc_align(100, A)
+    r = pud.simulate_op("and", [A, B, C], AMAP, model, adaptive=True)
+    assert r.t_ns <= r.t_cpu_ns
+
+
+def test_plan_partial_row_padding_rules():
+    """PUMA owns padded regions -> partial tail row still runs in PUD;
+    heap-packed hugepage allocations do not own the tail -> CPU."""
+    mem = PhysicalMemory(SMALL, seed=0, n_huge_pages=16)
+    pa = PumaAllocator(mem)
+    pa.pim_preallocate(4)
+    size = SMALL.region_bytes // 2
+    A = pa.pim_alloc(size)
+    plan = pud.plan_rows("zero", [A], SMALL)
+    assert plan.n_rows == 1 and plan.in_pud == [True] and plan.tail_bytes == 0
+
+    heap = HugePageModel(mem, "heap")
+    B = heap.alloc(size)
+    plan = pud.plan_rows("zero", [B], SMALL)
+    assert plan.tail_bytes == size and plan.in_pud == [False]

@@ -1,0 +1,103 @@
+"""Hypothesis property tests for the PUMA allocator invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.allocators import PhysicalMemory
+from repro.core.dram import AddressMap
+from repro.core.puma import PumaAllocator
+
+AMAP = AddressMap()
+REGION = AMAP.region_bytes
+
+
+def fresh(n_huge=16, seed=0):
+    mem = PhysicalMemory(AMAP, seed=seed, n_huge_pages=64)
+    pa = PumaAllocator(mem)
+    pa.pim_preallocate(n_huge)
+    return pa
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 200_000), min_size=1, max_size=12))
+def test_no_region_double_allocated(sizes):
+    pa = fresh()
+    live = []
+    for s in sizes:
+        a = pa.pim_alloc(s)
+        if a is None:
+            break
+        live.append(a)
+    seen = set()
+    for a in live:
+        for e in a.extents:
+            assert e.pa % REGION == 0
+            assert e.pa not in seen
+            seen.add(e.pa)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(
+        st.tuples(st.integers(1, 120_000), st.booleans()),
+        min_size=2, max_size=16,
+    ),
+    st.randoms(use_true_random=False),
+)
+def test_free_then_alloc_conserves_pool(ops, rnd):
+    pa = fresh()
+    total = pa.free_regions()
+    live = []
+    for size, do_free in ops:
+        if do_free and live:
+            pa.pim_free(live.pop(rnd.randrange(len(live))))
+        else:
+            a = pa.pim_alloc(size)
+            if a is not None:
+                live.append(a)
+        used = sum(-(-a.size // REGION) for a in live)
+        assert pa.free_regions() + used == total
+    for a in live:
+        pa.pim_free(a)
+    assert pa.free_regions() == total
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 64 * REGION))
+def test_alloc_align_colocates_when_space(size):
+    """Paper §2: aligned allocation places region k in the same subarray as
+    the hint's region k whenever that subarray has free regions."""
+    pa = fresh(n_huge=16)
+    A = pa.pim_alloc(size)
+    B = pa.pim_alloc_align(size, A)
+    assert A is not None and B is not None
+    sa = lambda alloc: [AMAP.region_subarray(e.pa) for e in alloc.extents]
+    sa_a, sa_b = sa(A), sa(B)
+    # with a fresh pool there is always room: exact co-location
+    assert sa_a == sa_b
+    assert pa.stats.align_misses == 0
+
+
+def test_alloc_align_requires_live_hint():
+    pa = fresh()
+    a = pa.pim_alloc(1000)
+    pa.pim_free(a)
+    assert pa.pim_alloc_align(1000, a) is None  # hashmap miss -> fail (paper)
+
+
+def test_worst_fit_picks_largest_pool():
+    pa = fresh(n_huge=8)
+    # drain one subarray partially, worst-fit must prefer the fullest ones
+    counts_before = pa.free_counts()
+    a = pa.pim_alloc(REGION)
+    target = AMAP.region_subarray(a.extents[0].pa)
+    assert counts_before[target] == max(counts_before.values())
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_exhaustion_fails_cleanly(seed):
+    pa = fresh(n_huge=1, seed=seed % 7)
+    total = pa.free_regions()
+    big = pa.pim_alloc((total + 1) * REGION)
+    assert big is None
+    assert pa.free_regions() == total  # nothing leaked
