@@ -5,21 +5,32 @@
   * kv_pool_bench   — TPU adaptation (block-table contiguity per policy)
   * kernel_bench    — kernel reference-path timings + agreement
   * roofline_report — §Roofline table (requires launch/roofline.py output)
+  * translate_bench — vectorized translation/planning fast path vs the seed
+                      scalar algorithms (persists BENCH_translate.json)
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  ``--smoke`` shrinks the
+translate microbenchmark for CI; ``--only translate`` runs just it.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="reduced sizes (CI)")
+    ap.add_argument("--only", default=None,
+                    help="run a single module (e.g. 'translate')")
+    args = ap.parse_args()
+
     from benchmarks import (
         alloc_fraction,
         kernel_bench,
         kv_pool_bench,
         microbench,
         roofline_report,
+        translate_bench,
     )
 
     print("name,us_per_call,derived")
@@ -28,11 +39,25 @@ def main() -> None:
         print(f"{name},{us:.1f},{derived}")
         sys.stdout.flush()
 
-    alloc_fraction.run(emit)
-    microbench.run(emit)
-    kv_pool_bench.run(emit)
-    kernel_bench.run(emit)
-    roofline_report.run(emit)
+    modules = {
+        "alloc_fraction": lambda: alloc_fraction.run(emit),
+        "microbench": lambda: microbench.run(emit),
+        "kv_pool": lambda: kv_pool_bench.run(emit),
+        "kernel": lambda: kernel_bench.run(emit),
+        "roofline": lambda: roofline_report.run(emit),
+        "translate": lambda: translate_bench.run(emit, smoke=args.smoke),
+    }
+    selected = {
+        name: fn
+        for name, fn in modules.items()
+        if args.only is None or args.only in name
+    }
+    if not selected:
+        raise SystemExit(
+            f"--only {args.only!r} matches no module ({', '.join(modules)})"
+        )
+    for fn in selected.values():
+        fn()
 
 
 if __name__ == "__main__":

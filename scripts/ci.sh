@@ -1,0 +1,31 @@
+#!/usr/bin/env bash
+# Lightweight CI: tier-1 test suite + the translation microbenchmark in
+# smoke mode (persists BENCH_translate.json for the perf trajectory).
+#
+#   bash scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== translate microbenchmark (smoke) =="
+PYTHONPATH="src:." python benchmarks/translate_bench.py --smoke
+
+echo "== BENCH_translate.json =="
+python - <<'EOF'
+import json
+rec = json.load(open("BENCH_translate.json"))
+fails = []
+for name, want in [("decode/bank_region", 20), ("decode/cacheline", 20),
+                   ("plan/malloc_512k_3op", 10), ("execute/malloc_512k_3op", 10)]:
+    got = rec[name]["speedup"]
+    status = "ok" if got >= want else "FAIL"
+    if got < want:
+        fails.append(name)
+    print(f"  {status}: {name} {got:.1f}x (need >= {want}x)")
+raise SystemExit(1 if fails else 0)
+EOF
+echo "CI OK"

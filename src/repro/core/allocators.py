@@ -9,13 +9,19 @@ execute in DRAM; huge-page-backed allocation is physically contiguous per
 Everything is modeled at the level the OS sees: a ``PhysicalMemory`` with
 4 KB base pages and 2 MB huge pages, boot-time fragmentation, and allocators
 that build VA->PA page tables.  ``Allocation`` is the common currency shared
-with :mod:`repro.core.puma` and consumed by :mod:`repro.core.pud`.
+with :mod:`repro.core.puma` and consumed by :mod:`repro.core.pud`; its
+extent list is normalized (sorted + physically-adjacent extents coalesced)
+at construction so translation is O(log E) bisect and bulk consumers walk
+whole runs via :meth:`Allocation.runs` instead of probing byte-by-byte.
 """
 from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Dict, List, Optional, Tuple
+from bisect import bisect_right
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
 
 from repro.core.dram import AddressMap
 
@@ -45,36 +51,72 @@ class Extent:
 
 @dataclasses.dataclass
 class Allocation:
-    """VA-contiguous allocation with its VA->PA mapping."""
+    """VA-contiguous allocation with its VA->PA mapping.
+
+    Extents are normalized at construction: sorted by ``va_off`` and
+    *coalesced* — VA-adjacent extents that are also PA-adjacent merge into
+    one.  After coalescing every extent is a maximal physically contiguous
+    run, so translation is a single ``bisect`` over the cached ``va_off``
+    array instead of a linear scan, and :meth:`runs` hands callers whole
+    (pa, nbytes) runs so nobody ever probes byte-by-byte.
+    """
 
     va: int
     size: int
     extents: List[Extent]          # sorted by va_off, covering [0, size_padded)
     allocator: str
 
+    def __post_init__(self):
+        exts = sorted(self.extents, key=lambda e: e.va_off)
+        merged: List[Extent] = []
+        for e in exts:
+            if merged:
+                m = merged[-1]
+                if m.va_off + m.nbytes == e.va_off and m.pa + m.nbytes == e.pa:
+                    merged[-1] = Extent(m.va_off, m.pa, m.nbytes + e.nbytes)
+                    continue
+            merged.append(e)
+        self.extents = merged
+        # Parallel plain-int lists: bisect + index, no attribute chasing.
+        self._va_offs: List[int] = [e.va_off for e in merged]
+        self._va_ends: List[int] = [e.va_off + e.nbytes for e in merged]
+        self._pas: List[int] = [e.pa for e in merged]
+        self._row_sa_cache: Dict[int, Tuple[object, np.ndarray]] = {}
+
     def pa_of(self, va_off: int) -> int:
         """Translate an offset inside the allocation to a physical address."""
-        for e in self.extents:
-            if e.va_off <= va_off < e.va_off + e.nbytes:
-                return e.pa + (va_off - e.va_off)
+        i = bisect_right(self._va_offs, va_off) - 1
+        if i >= 0 and va_off < self._va_ends[i]:
+            return self._pas[i] + (va_off - self._va_offs[i])
         raise ValueError(f"offset {va_off} not mapped (size={self.size})")
 
     def contiguous_run(self, va_off: int, nbytes: int) -> Optional[int]:
         """PA base if [va_off, va_off+nbytes) is one physically contiguous run."""
-        if va_off + nbytes > self.extents[-1].va_off + self.extents[-1].nbytes:
+        if va_off + nbytes > self._va_ends[-1]:
             return None
-        base = self.pa_of(va_off)
+        i = bisect_right(self._va_offs, va_off) - 1
+        if i < 0 or va_off >= self._va_ends[i]:
+            raise ValueError(f"offset {va_off} not mapped (size={self.size})")
+        # extents are coalesced, so a contiguous run cannot span two of them
+        if va_off + nbytes <= self._va_ends[i]:
+            return self._pas[i] + (va_off - self._va_offs[i])
+        return None
+
+    def runs(self, va_off: int, nbytes: int) -> Iterator[Tuple[int, int]]:
+        """Yield maximal physically contiguous ``(pa, nbytes)`` runs covering
+        ``[va_off, va_off + nbytes)``, in VA order."""
+        end = va_off + nbytes
+        i = bisect_right(self._va_offs, va_off) - 1
         cur = va_off
-        while cur < va_off + nbytes:
-            for e in self.extents:
-                if e.va_off <= cur < e.va_off + e.nbytes:
-                    if e.pa + (cur - e.va_off) != base + (cur - va_off):
-                        return None
-                    cur = e.va_off + e.nbytes
-                    break
-            else:
-                return None
-        return base
+        while cur < end:
+            if i < 0 or i >= len(self.extents) or not (
+                self._va_offs[i] <= cur < self._va_ends[i]
+            ):
+                raise ValueError(f"offset {cur} not mapped (size={self.size})")
+            n = min(end, self._va_ends[i]) - cur
+            yield self._pas[i] + (cur - self._va_offs[i]), n
+            cur += n
+            i += 1
 
 
 class PhysicalMemory:

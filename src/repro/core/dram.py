@@ -30,11 +30,28 @@ Two interleaving schemes are provided:
   byte-for-byte, so PUD executability reduces to matching subarray stripes.
   The same decode logic covers it because region bases zero the low
   channel/bank fields.
+
+Decode fast path
+----------------
+
+``AddressMap`` precomputes every field's shift and mask at construction, so
+scalar :meth:`AddressMap.decode` is straight bit arithmetic and
+:meth:`AddressMap.region_subarrays` decodes a whole ``np.ndarray`` of
+physical addresses with a handful of vectorized bit operations — the
+translation layer the PUD planner, the PUMA pre-allocator, and the
+benchmarks all batch through.  :meth:`AddressMap.region_subarray_table`
+additionally memoizes the full region→global-subarray map (one ``int32``
+per region, built lazily on first use) for O(1) repeated scalar lookups.
+The scalar :meth:`AddressMap.region_subarray` keeps the original
+one-address-at-a-time decode; property tests assert the two paths agree
+under every interleave scheme.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
+from typing import List, Optional, Tuple
+
+import numpy as np
 
 __all__ = [
     "DramGeometry",
@@ -210,6 +227,16 @@ class AddressMap:
                 break
             bits_below_row += width
         self._region_bytes = 1 << bits_below_row
+        # Per-field shift/mask, computed once: decode becomes pure bit math.
+        self._shifts = {}
+        self._masks = {}
+        shift = 0
+        for name, width in self._fields:
+            self._shifts[name] = shift
+            self._masks[name] = (1 << width) - 1
+            shift += width
+        self._log_rows_per_sub = _log2(self.geo.rows_per_subarray)
+        self._region_sa_table: Optional[np.ndarray] = None  # lazy memo
 
     @property
     def total_bytes(self) -> int:
@@ -218,23 +245,20 @@ class AddressMap:
     def decode(self, pa: int) -> DramCoord:
         if not (0 <= pa < self.geo.total_bytes):
             raise ValueError(f"physical address {pa:#x} out of range")
-        vals = {}
-        shift = 0
-        for name, width in self._fields:
-            vals[name] = (pa >> shift) & ((1 << width) - 1)
-            shift += width
-        row_global = vals["row"]
-        bank = vals["bank"]
+        sh, mk = self._shifts, self._masks
+        row_global = (pa >> sh["row"]) & mk["row"]
+        bank = (pa >> sh["bank"]) & mk["bank"]
         if self.scheme.xor_row_into_bank:
             bank ^= row_global & (self.geo.banks_per_rank - 1)
-        col_lo_w = dict(self._fields)["col_lo"]
-        col = vals["col_lo"] | (vals["col_hi"] << col_lo_w)
+        col = ((pa >> sh["col_lo"]) & mk["col_lo"]) | (
+            ((pa >> sh["col_hi"]) & mk["col_hi"]) << mk["col_lo"].bit_length()
+        )
         return DramCoord(
-            channel=vals["channel"],
-            rank=vals["rank"],
+            channel=(pa >> sh["channel"]) & mk["channel"],
+            rank=(pa >> sh["rank"]) & mk["rank"],
             bank=bank,
-            subarray=row_global // self.geo.rows_per_subarray,
-            row=row_global % self.geo.rows_per_subarray,
+            subarray=row_global >> self._log_rows_per_sub,
+            row=row_global & (self.geo.rows_per_subarray - 1),
             col=col,
         )
 
@@ -256,19 +280,69 @@ class AddressMap:
         BANK_REGION_SCHEME, and the subarray *stripe* under the cacheline-
         interleaved scheme — in both cases, equality of this ID across two
         aligned regions is exactly PUD operand compatibility.
+
+        This is the scalar reference path (one full decode per call); batch
+        callers should use :meth:`region_subarrays` and repeated scalar
+        callers :meth:`region_subarray_table`.
         """
         return self.decode(pa).global_subarray(self.geo)
 
-    def regions_in_range(self, pa: int, nbytes: int) -> List[Tuple[int, int]]:
-        """(region_pa, global_subarray) for every full region in [pa, pa+n)."""
-        out = []
+    def region_subarrays(self, pas: np.ndarray) -> np.ndarray:
+        """Vectorized :meth:`region_subarray` over an array of addresses.
+
+        Pure bit operations on int64 arrays — no per-element Python.  The
+        inputs need not be region-aligned; sub-region bits are simply ignored
+        (they sit below the row/bank/rank/channel fields by construction).
+        """
+        pas = np.asarray(pas, dtype=np.int64)
+        geo = self.geo
+        sh, mk = self._shifts, self._masks
+        row = (pas >> sh["row"]) & mk["row"]
+        bank = (pas >> sh["bank"]) & mk["bank"]
+        if self.scheme.xor_row_into_bank:
+            bank = bank ^ (row & (geo.banks_per_rank - 1))
+        rank = (pas >> sh["rank"]) & mk["rank"]
+        chan = (pas >> sh["channel"]) & mk["channel"]
+        sa = row >> self._log_rows_per_sub
+        g = (sa * geo.banks_per_rank + bank) * geo.ranks_per_channel + rank
+        return g * geo.channels + chan
+
+    def region_subarray_table(self) -> np.ndarray:
+        """Memoized region-index → global-subarray lookup (int32, lazy).
+
+        Built once per ``AddressMap`` via the batch decode; indexing it with
+        ``pa // region_bytes`` answers repeated scalar queries (e.g. PUMA's
+        aligned-allocation hint walk) without re-decoding.
+        """
+        if self._region_sa_table is None:
+            n = self.geo.total_bytes // self._region_bytes
+            rpas = np.arange(n, dtype=np.int64) * self._region_bytes
+            self._region_sa_table = self.region_subarrays(rpas).astype(np.int32)
+        return self._region_sa_table
+
+    def region_range(self, pa: int, nbytes: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Batch form of :meth:`regions_in_range`: ``(region_pas, subarrays)``
+        as int64 arrays for every full region inside ``[pa, pa + nbytes)``."""
         rb = self._region_bytes
         first = -(-pa // rb)  # ceil
         last = (pa + nbytes) // rb
-        for r in range(first, last):
-            rpa = r * rb
-            out.append((rpa, self.region_subarray(rpa)))
-        return out
+        if last <= first:
+            empty = np.empty(0, dtype=np.int64)
+            return empty, empty
+        # the scalar path range-checked every decode; keep failing loudly
+        # rather than letting the bit-ops alias out-of-range addresses
+        if first < 0 or last * rb > self.geo.total_bytes:
+            raise ValueError(
+                f"region range [{pa:#x}, {pa + nbytes:#x}) exceeds "
+                f"{self.geo.total_bytes:#x} bytes of physical memory"
+            )
+        rpas = np.arange(first, last, dtype=np.int64) * rb
+        return rpas, self.region_subarrays(rpas)
+
+    def regions_in_range(self, pa: int, nbytes: int) -> List[Tuple[int, int]]:
+        """(region_pa, global_subarray) for every full region in [pa, pa+n)."""
+        rpas, sas = self.region_range(pa, nbytes)
+        return list(zip(rpas.tolist(), sas.tolist()))
 
 
 DEFAULT_GEOMETRY = DramGeometry()

@@ -20,6 +20,21 @@ Ambit [101]: an AAP (ACTIVATE-ACTIVATE-PRECHARGE) command sequence costs
 a streaming read/write through the memory hierarchy.  Absolute numbers only
 set the scale; the paper's Figure 2 normalizes to the malloc baseline, and
 so do we.
+
+Planning fast path
+------------------
+
+``plan_rows`` no longer probes each logical row with scalar
+``contiguous_run``/``region_subarray`` calls.  Each operand's per-row global
+subarray (or -1 where the row is not PUD-capable) is computed as one numpy
+array — a ``searchsorted`` over the allocation's coalesced extents plus the
+batch decode from :mod:`repro.core.dram` — and memoized on the
+``Allocation`` (the mapping is immutable after construction, so the cache
+lives as long as the allocation; freeing drops the allocation and the table
+with it).  Executability is then a vectorized equality across operand
+tables.  ``execute_op`` walks :meth:`Allocation.runs` so every physically
+contiguous run moves as one slice instead of byte-by-byte ``pa_of`` probing.
+Property tests pin both fast paths to the original scalar semantics.
 """
 from __future__ import annotations
 
@@ -31,7 +46,15 @@ import numpy as np
 from repro.core.allocators import Allocation
 from repro.core.dram import AddressMap
 
-__all__ = ["OpKind", "PudCostModel", "RowPlan", "plan_rows", "simulate_op", "execute_op"]
+__all__ = [
+    "OpKind",
+    "PudCostModel",
+    "RowPlan",
+    "row_subarray_table",
+    "plan_rows",
+    "simulate_op",
+    "execute_op",
+]
 
 
 OpKind = str  # "zero" | "copy" | "and" | "or" | "not"
@@ -62,7 +85,12 @@ class PudCostModel:
         return streams * nbytes
 
     def cpu_ns(self, op: OpKind, nbytes: int, nrows: int = 1) -> float:
-        move = self.cpu_bytes_moved(op, nbytes) / self.cpu_bw_gbs  # ns (B/GBps)
+        # Unit identity, made explicit: 1 GB/s = 1e9 B / 1e9 ns = exactly
+        # 1 byte/ns, so a bandwidth of ``cpu_bw_gbs`` GB/s moves
+        # ``cpu_bw_gbs`` bytes per nanosecond.  (Not a coincidence of the
+        # default value — the 1e9s cancel for any parameter setting.)
+        bytes_per_ns = self.cpu_bw_gbs
+        move = self.cpu_bytes_moved(op, nbytes) / bytes_per_ns
         return move + nrows * self.cpu_row_touch_ns
 
 
@@ -84,12 +112,43 @@ class RowPlan:
 def _row_subarray(
     alloc: Allocation, row: int, region_bytes: int, amap: AddressMap
 ) -> Optional[int]:
-    """Global subarray of logical row ``row``; None if not PUD-capable."""
+    """Global subarray of logical row ``row``; None if not PUD-capable.
+
+    Scalar reference path — ``plan_rows`` uses the vectorized
+    :func:`row_subarray_table`; property tests assert they agree.
+    """
     off = row * region_bytes
     pa = alloc.contiguous_run(off, region_bytes)
     if pa is None or not amap.region_is_aligned(pa):
         return None
     return amap.region_subarray(pa)
+
+
+def row_subarray_table(alloc: Allocation, amap: AddressMap) -> np.ndarray:
+    """Per-row global subarray of ``alloc`` as an int64 array (-1 = not
+    PUD-capable), memoized on the allocation.
+
+    Row ``r`` is PUD-capable iff the full region ``[r*region, (r+1)*region)``
+    sits inside one coalesced extent (ownership + physical contiguity) at a
+    region-aligned physical base; its value is then the region's global
+    subarray from the batch decode.
+    """
+    cached = alloc._row_sa_cache.get(id(amap))
+    if cached is not None and cached[0] is amap:
+        return cached[1]
+    region = amap.region_bytes
+    n_rows = -(-alloc.size // region)
+    offs = np.arange(n_rows, dtype=np.int64) * region
+    va_offs = np.asarray(alloc._va_offs, dtype=np.int64)
+    ends = np.asarray(alloc._va_ends, dtype=np.int64)
+    pas = np.asarray(alloc._pas, dtype=np.int64)
+    idx = np.searchsorted(va_offs, offs, side="right") - 1
+    idxc = np.clip(idx, 0, len(va_offs) - 1)
+    pa = pas[idxc] + offs - va_offs[idxc]
+    ok = (idx >= 0) & (offs + region <= ends[idxc]) & (pa % region == 0)
+    table = np.where(ok, amap.region_subarrays(pa), -1)
+    alloc._row_sa_cache[id(amap)] = (amap, table)
+    return table
 
 
 def plan_rows(
@@ -101,7 +160,7 @@ def plan_rows(
     execute in DRAM when every allocator padded the allocation out to a full
     owned region (PUMA and per-mmap huge pages do; heap allocators do not —
     their extents stop at the requested size, and operating on the full row
-    would clobber a neighbour).  ``_row_subarray``'s full-region contiguity
+    would clobber a neighbour).  The row table's full-region contiguity
     check is exactly that ownership test.
     """
     assert len(operands) == N_OPERANDS[op], (op, len(operands))
@@ -109,11 +168,13 @@ def plan_rows(
     region = amap.region_bytes
     n_full, tail = divmod(size, region)
     n_rows = n_full + (1 if tail else 0)
-    in_pud: List[bool] = []
-    for r in range(n_rows):
-        sas = [_row_subarray(a, r, region, amap) for a in operands]
-        ok = sas[0] is not None and all(s == sas[0] for s in sas)
-        in_pud.append(ok)
+    if n_rows == 0:
+        return RowPlan(n_rows=0, in_pud=[], tail_bytes=0)
+    tables = [row_subarray_table(a, amap)[:n_rows] for a in operands]
+    ok = tables[0] != -1
+    for t in tables[1:]:
+        ok = ok & (t == tables[0])
+    in_pud = ok.tolist()
     tail_bytes = 0 if (not tail or in_pud[-1]) else tail
     return RowPlan(n_rows=n_rows, in_pud=in_pud, tail_bytes=tail_bytes)
 
@@ -208,24 +269,14 @@ def execute_op(
     def read(a: Allocation, off: int, n: int) -> np.ndarray:
         out = np.empty(n, np.uint8)
         done = 0
-        while done < n:
-            pa = a.pa_of(off + done)
-            run = 1
-            # extend run while physically contiguous
-            while done + run < n and a.pa_of(off + done + run) == pa + run:
-                run += 1
+        for pa, run in a.runs(off, n):
             out[done : done + run] = phys[pa : pa + run]
             done += run
         return out
 
     def write(a: Allocation, off: int, buf: np.ndarray) -> None:
         done = 0
-        n = len(buf)
-        while done < n:
-            pa = a.pa_of(off + done)
-            run = 1
-            while done + run < n and a.pa_of(off + done + run) == pa + run:
-                run += 1
+        for pa, run in a.runs(off, len(buf)):
             phys[pa : pa + run] = buf[done : done + run]
             done += run
 

@@ -27,6 +27,8 @@ import dataclasses
 import heapq
 from typing import Dict, List, Optional
 
+import numpy as np
+
 from repro.core.allocators import HUGE_PAGE, Allocation, Extent, PhysicalMemory
 from repro.core.dram import AddressMap
 
@@ -55,11 +57,30 @@ class _OrderedArray:
     def __init__(self):
         self.free: Dict[int, List[int]] = {}   # subarray -> region PAs (LIFO)
         self._heap: List[tuple] = []           # (-count, subarray), lazy
+        self._total = 0                        # running free-region count
 
     def add_region(self, subarray: int, pa: int) -> None:
         lst = self.free.setdefault(subarray, [])
         lst.append(pa)
         heapq.heappush(self._heap, (-len(lst), subarray))
+        self._total += 1
+
+    def add_regions(self, subarrays: np.ndarray, pas: np.ndarray) -> None:
+        """Bulk insert: group by subarray, extend each free list once, and
+        push ONE heap entry per touched subarray instead of one per region."""
+        if len(pas) == 0:
+            return
+        order = np.argsort(subarrays, kind="stable")
+        sas = np.asarray(subarrays)[order]
+        ps = np.asarray(pas)[order]
+        starts = np.flatnonzero(np.r_[True, sas[1:] != sas[:-1]])
+        stops = np.r_[starts[1:], len(sas)]
+        for start, stop in zip(starts.tolist(), stops.tolist()):
+            sa = int(sas[start])
+            lst = self.free.setdefault(sa, [])
+            lst.extend(ps[start:stop].tolist())
+            heapq.heappush(self._heap, (-len(lst), sa))
+        self._total += len(ps)
 
     def take_from(self, subarray: int) -> Optional[int]:
         lst = self.free.get(subarray)
@@ -67,6 +88,7 @@ class _OrderedArray:
             return None
         pa = lst.pop()
         heapq.heappush(self._heap, (-len(lst), subarray))
+        self._total -= 1
         return pa
 
     def worst_fit_subarray(self) -> Optional[int]:
@@ -79,7 +101,7 @@ class _OrderedArray:
         return None
 
     def total_free(self) -> int:
-        return sum(len(v) for v in self.free.values())
+        return self._total
 
     def free_counts(self) -> Dict[int, int]:
         return {sa: len(v) for sa, v in self.free.items() if v}
@@ -100,12 +122,20 @@ class PumaAllocator:
 
     # -- 1) pre-allocation (paper step (1)) ---------------------------------
     def pim_preallocate(self, n_huge_pages: int) -> int:
-        """Populate the PUD pool; returns the number of regions indexed."""
-        added = 0
-        for hp in self.mem.take_huge(n_huge_pages):
-            for rpa, subarray in self.amap.regions_in_range(hp, HUGE_PAGE):
-                self._ordered.add_region(subarray, rpa)
-                added += 1
+        """Populate the PUD pool; returns the number of regions indexed.
+
+        Every huge page's regions are decoded in one numpy batch (huge pages
+        are region-aligned, so the region set is a plain arange) and inserted
+        grouped-by-subarray — no per-region Python calls.
+        """
+        hps = self.mem.take_huge(n_huge_pages)
+        if not hps:
+            return 0
+        rb = self.region_bytes
+        per_hp = np.arange(HUGE_PAGE // rb, dtype=np.int64) * rb
+        rpas = (np.asarray(hps, dtype=np.int64)[:, None] + per_hp).ravel()
+        self._ordered.add_regions(self.amap.region_subarrays(rpas), rpas)
+        added = len(rpas)
         self.stats.preallocated_regions += added
         return added
 
@@ -129,8 +159,10 @@ class PumaAllocator:
         return alloc
 
     def _release(self, region_pas: List[int]) -> None:
-        for pa in region_pas:
-            self._ordered.add_region(self.amap.region_subarray(pa), pa)
+        if not region_pas:
+            return
+        pas = np.asarray(region_pas, dtype=np.int64)
+        self._ordered.add_regions(self.amap.region_subarrays(pas), pas)
 
     # -- 2) first allocation: worst-fit (paper step (2)) ----------------------
     def pim_alloc(self, size: int) -> Optional[Allocation]:
@@ -167,9 +199,14 @@ class PumaAllocator:
         got: List[int] = []
         # steps 2-4: iterate hint regions, allocate in the same subarray,
         # fall back to worst-fit when that subarray has no free region.
+        # One batch decode answers every hint lookup up front; the scalar
+        # decode ran once per hint region before.
+        hint_sas = self.amap.region_subarrays(
+            np.asarray(hint_regions[:need], dtype=np.int64)
+        )
         for k in range(need):
             if k < len(hint_regions):
-                target_sa = self.amap.region_subarray(hint_regions[k])
+                target_sa = int(hint_sas[k])
                 pa = self._ordered.take_from(target_sa)
                 if pa is not None:
                     got.append(pa)

@@ -1,0 +1,1 @@
+"""Distribution plumbing: logical-axis sharding rules and mesh registry."""

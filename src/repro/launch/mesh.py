@@ -14,17 +14,23 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh_compat(shape, axes):
+    """``jax.make_mesh`` with ``AxisType.Auto`` where the installed jax has
+    it (``axis_types`` landed after 0.4.x); a plain mesh otherwise.  Keeps
+    one mesh-construction path working across the jax versions the repo
+    sees (CPU container vs real-hardware toolchains)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh_compat(shape, axes)
 
 
 def make_smoke_mesh(n_data: int = 2, n_model: int = 4):
     """Small mesh for CPU integration tests (8 forced host devices)."""
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh_compat((n_data, n_model), ("data", "model"))

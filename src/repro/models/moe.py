@@ -27,13 +27,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.dist.sharding import get_mesh
+from repro.dist.sharding import get_mesh, shard_map_compat as _shard_map
 from repro.models.params import ParamDef
-
-try:  # jax >= 0.6
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
 
 
 def moe_defs(cfg: ModelConfig) -> Dict:

@@ -1,6 +1,8 @@
 """TilePool (TPU arena allocator) invariants + policy quality."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.arena import TilePool

@@ -57,8 +57,8 @@ def test_moe_shard_map_matches_local():
                     jnp.float32)
     out_local, aux_local = MOE.apply_moe(params, cfg, x)
 
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh_compat
+    mesh = make_mesh_compat((1, 1), ("data", "model"))
     with shd.use_mesh(mesh):
         out_dist, aux_dist = MOE.apply_moe(params, cfg, x)
     np.testing.assert_allclose(
@@ -112,7 +112,10 @@ def test_spmd_train_step_8_devices():
     out = subprocess.run(
         [sys.executable, "-c", _SUBPROCESS_SCRIPT],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin",
+             # the script forces 8 *host* devices — never let jax try to
+             # initialize a real accelerator plugin in the bare subprocess
+             "JAX_PLATFORMS": "cpu"},
         cwd=".",
     )
     assert out.returncode == 0, out.stderr[-3000:]

@@ -1,5 +1,8 @@
 """Hypothesis property tests for the PUMA allocator invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.allocators import PhysicalMemory

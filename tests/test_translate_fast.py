@@ -1,0 +1,247 @@
+"""Property tests: the vectorized translation/planning fast path must be
+bit-identical to the seed's scalar algorithms.
+
+Randomized (seeded ``random.Random``, no hypothesis dependency) over:
+
+* ``region_subarrays`` / ``region_subarray_table`` vs scalar
+  ``region_subarray`` under BANK_REGION, CACHELINE_INTERLEAVED, and the
+  XOR-folded variants;
+* coalesced + bisected ``pa_of`` / ``contiguous_run`` / ``runs`` vs the
+  seed's linear-scan semantics on randomized extent lists;
+* vectorized ``plan_rows`` vs the seed's per-row scalar probe across
+  allocator mixes.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import pud
+from repro.core.allocators import (
+    Allocation,
+    Extent,
+    HugePageModel,
+    MallocModel,
+    PhysicalMemory,
+    PosixMemalignModel,
+)
+from repro.core.dram import (
+    AddressMap,
+    BANK_REGION_SCHEME,
+    CACHELINE_INTERLEAVED_SCHEME,
+    DramGeometry,
+    InterleaveScheme,
+)
+from repro.core.puma import PumaAllocator
+
+SCHEMES = {
+    "bank_region": BANK_REGION_SCHEME,
+    "cacheline": CACHELINE_INTERLEAVED_SCHEME,
+    "bank_region_xor": InterleaveScheme(
+        order=BANK_REGION_SCHEME.order, xor_row_into_bank=True
+    ),
+    "cacheline_xor": InterleaveScheme(
+        order=CACHELINE_INTERLEAVED_SCHEME.order, xor_row_into_bank=True
+    ),
+}
+
+SMALL_GEO = DramGeometry(subarrays_per_bank=16)  # 128 MB
+
+
+# ---------------------------------------------------------------------------
+# seed-reference scalar algorithms (the pre-fast-path semantics)
+# ---------------------------------------------------------------------------
+
+def _seed_pa_of(extents, size, va_off):
+    for e in extents:
+        if e.va_off <= va_off < e.va_off + e.nbytes:
+            return e.pa + (va_off - e.va_off)
+    raise ValueError(f"offset {va_off} not mapped (size={size})")
+
+
+def _seed_contiguous_run(extents, size, va_off, nbytes):
+    if va_off + nbytes > extents[-1].va_off + extents[-1].nbytes:
+        return None
+    base = _seed_pa_of(extents, size, va_off)
+    cur = va_off
+    while cur < va_off + nbytes:
+        for e in extents:
+            if e.va_off <= cur < e.va_off + e.nbytes:
+                if e.pa + (cur - e.va_off) != base + (cur - va_off):
+                    return None
+                cur = e.va_off + e.nbytes
+                break
+        else:
+            return None
+    return base
+
+
+def _random_extents(rnd: random.Random, total_pa: int):
+    """A randomized extent list: contiguous VA cover, random PA placement
+    with occasional deliberately PA-adjacent neighbours (coalesce bait)."""
+    n = rnd.randrange(1, 20)
+    sizes = [rnd.choice([64, 256, 1024, 4096, 8192]) for _ in range(n)]
+    extents, va = [], 0
+    for s in sizes:
+        if extents and rnd.random() < 0.4:
+            prev = extents[-1]
+            pa = prev.pa + prev.nbytes  # physically adjacent: must coalesce
+        else:
+            pa = rnd.randrange(0, (total_pa - s) // 64) * 64
+        extents.append(Extent(va, pa, s))
+        va += s
+    order = list(range(n))
+    rnd.shuffle(order)  # constructor must sort by va_off
+    return [extents[i] for i in order], va
+
+
+@pytest.mark.parametrize("scheme_name", sorted(SCHEMES))
+def test_region_subarrays_matches_scalar(scheme_name):
+    amap = AddressMap(SMALL_GEO, SCHEMES[scheme_name])
+    rb = amap.region_bytes
+    rng = np.random.default_rng(42)
+    pas = rng.integers(0, amap.total_bytes // rb, 4096, dtype=np.int64) * rb
+    batch = amap.region_subarrays(pas)
+    scalar = np.array([amap.region_subarray(int(p)) for p in pas])
+    np.testing.assert_array_equal(batch, scalar)
+    # memoized table agrees too, and is cached
+    table = amap.region_subarray_table()
+    np.testing.assert_array_equal(table[pas // rb], scalar)
+    assert amap.region_subarray_table() is table
+
+
+@pytest.mark.parametrize("scheme_name", sorted(SCHEMES))
+def test_regions_in_range_matches_scalar(scheme_name):
+    amap = AddressMap(SMALL_GEO, SCHEMES[scheme_name])
+    rb = amap.region_bytes
+    rnd = random.Random(7)
+    for _ in range(50):
+        pa = rnd.randrange(0, amap.total_bytes // 2)
+        nbytes = rnd.randrange(0, 64 * rb)
+        got = amap.regions_in_range(pa, nbytes)
+        first = -(-pa // rb)
+        last = (pa + nbytes) // rb
+        want = [(r * rb, amap.region_subarray(r * rb)) for r in range(first, last)]
+        assert got == want
+
+
+def test_extent_normalization_coalesces_and_sorts():
+    rnd = random.Random(0)
+    for _ in range(100):
+        extents, size = _random_extents(rnd, SMALL_GEO.total_bytes)
+        a = Allocation(0x1000, size, list(extents), "test")
+        # sorted, non-overlapping, same VA cover
+        offs = [e.va_off for e in a.extents]
+        assert offs == sorted(offs)
+        assert sum(e.nbytes for e in a.extents) == size
+        # maximality: no two neighbours are both VA- and PA-adjacent
+        for e1, e2 in zip(a.extents, a.extents[1:]):
+            assert not (
+                e1.va_off + e1.nbytes == e2.va_off
+                and e1.pa + e1.nbytes == e2.pa
+            )
+
+
+def test_pa_of_and_contiguous_run_match_seed_semantics():
+    rnd = random.Random(1)
+    for _ in range(60):
+        extents, size = _random_extents(rnd, SMALL_GEO.total_bytes)
+        seed_exts = sorted(extents, key=lambda e: e.va_off)
+        a = Allocation(0x1000, size, list(extents), "test")
+        for _ in range(40):
+            off = rnd.randrange(0, size)
+            assert a.pa_of(off) == _seed_pa_of(seed_exts, size, off)
+            n = rnd.randrange(1, size - off + 1)
+            assert a.contiguous_run(off, n) == _seed_contiguous_run(
+                seed_exts, size, off, n
+            )
+        with pytest.raises(ValueError):
+            a.pa_of(size + sum(e.nbytes for e in seed_exts))
+        with pytest.raises(ValueError):
+            a.pa_of(-1)
+
+
+def test_runs_cover_range_and_are_maximal():
+    rnd = random.Random(2)
+    for _ in range(60):
+        extents, size = _random_extents(rnd, SMALL_GEO.total_bytes)
+        a = Allocation(0x1000, size, list(extents), "test")
+        off = rnd.randrange(0, size)
+        n = rnd.randrange(1, size - off + 1)
+        runs = list(a.runs(off, n))
+        assert sum(r[1] for r in runs) == n
+        # every byte agrees with pa_of; runs never merge across a PA break
+        cur = off
+        for pa, ln in runs:
+            assert a.pa_of(cur) == pa
+            assert a.pa_of(cur + ln - 1) == pa + ln - 1
+            cur += ln
+        for (pa1, n1), (pa2, _) in zip(runs, runs[1:]):
+            assert pa1 + n1 != pa2  # else it was not maximal
+
+
+@pytest.mark.parametrize("scheme_name", ["bank_region", "cacheline"])
+def test_plan_rows_matches_scalar_probe(scheme_name):
+    amap = AddressMap(SMALL_GEO, SCHEMES[scheme_name])
+    mem = PhysicalMemory(amap, seed=5, n_huge_pages=24, occupancy=0.2)
+    region = amap.region_bytes
+    puma = PumaAllocator(mem)
+    puma.pim_preallocate(8)
+    allocators = {
+        "malloc": MallocModel(mem),
+        "memalign": PosixMemalignModel(mem),
+        "huge": HugePageModel(mem),
+        "huge_heap": HugePageModel(mem, "heap"),
+    }
+    rnd = random.Random(9)
+    for op, n_ops in [("zero", 1), ("copy", 2), ("and", 3)]:
+        for kind, al in allocators.items():
+            size = rnd.randrange(1, 6 * region)
+            operands = [al.alloc(size) for _ in range(n_ops)]
+            plan = pud.plan_rows(op, operands, amap)
+            # scalar probe row by row (the seed algorithm)
+            n_full, tail = divmod(size, region)
+            n_rows = n_full + (1 if tail else 0)
+            assert plan.n_rows == n_rows
+            for r in range(n_rows):
+                sas = [
+                    pud._row_subarray(a, r, region, amap) for a in operands
+                ]
+                want = sas[0] is not None and all(s == sas[0] for s in sas)
+                assert plan.in_pud[r] == want, (op, kind, r)
+        # PUMA aligned operands plan fully in-PUD
+        size = rnd.randrange(1, 4 * region)
+        operands = [puma.pim_alloc(size)]
+        while len(operands) < n_ops:
+            operands.append(puma.pim_alloc_align(size, operands[0]))
+        plan = pud.plan_rows(op, operands, amap)
+        assert plan.in_pud == [True] * plan.n_rows
+        for a in operands:
+            puma.pim_free(a)
+
+
+def test_row_subarray_table_cached_per_amap():
+    amap1 = AddressMap(SMALL_GEO, BANK_REGION_SCHEME)
+    amap2 = AddressMap(SMALL_GEO, CACHELINE_INTERLEAVED_SCHEME)
+    mem = PhysicalMemory(amap1, seed=0, n_huge_pages=16)
+    a = MallocModel(mem).alloc(64 * 1024)
+    t1 = pud.row_subarray_table(a, amap1)
+    assert pud.row_subarray_table(a, amap1) is t1  # memoized
+    t2 = pud.row_subarray_table(a, amap2)          # second map: own entry
+    assert pud.row_subarray_table(a, amap2) is t2
+    assert pud.row_subarray_table(a, amap1) is t1
+
+
+def test_ordered_array_total_free_running_count():
+    amap = AddressMap(SMALL_GEO, CACHELINE_INTERLEAVED_SCHEME)
+    mem = PhysicalMemory(amap, seed=0, n_huge_pages=32)
+    puma = PumaAllocator(mem)
+    n = puma.pim_preallocate(4)
+    assert puma.free_regions() == n
+    assert n == sum(puma.free_counts().values())
+    a = puma.pim_alloc(5 * amap.region_bytes)
+    assert puma.free_regions() == n - 5
+    assert puma.free_regions() == sum(puma.free_counts().values())
+    puma.pim_free(a)
+    assert puma.free_regions() == n
+    assert puma.free_regions() == sum(puma.free_counts().values())
