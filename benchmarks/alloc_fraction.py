@@ -2,6 +2,13 @@
 
 Reproduces the motivation numbers: malloc/posix_memalign -> 0 %, huge pages
 -> partial ("up to 60 %"), PUMA -> ~100 %.
+
+The channel view (``alloc_channel/...`` rows) breaks the same figure of
+merit down per memory channel on an 8-channel geometry: the PUD-executable
+fraction of the rows owned by each channel, plus the striped allocator's
+per-channel subarray occupancy and its load balance — placement imbalance
+caps the channel-parallel speedup at ``max`` rows per channel even when
+every row is individually executable.
 """
 from __future__ import annotations
 
@@ -17,7 +24,7 @@ from repro.core.allocators import (
     PhysicalMemory,
     PosixMemalignModel,
 )
-from repro.core.dram import AddressMap
+from repro.core.dram import AddressMap, BANK_REGION_SCHEME, DramGeometry
 from repro.core.puma import PumaAllocator
 
 SIZES_BITS = [2_000, 8_000, 32_000, 128_000, 512_000, 2_000_000, 6_000_000]
@@ -48,6 +55,58 @@ def _fraction_puma(amap, op: str, nops: int, size: int) -> float:
     return float(np.mean(fr))
 
 
+def _channel_view(emit: Callable[[str, float, float], None]) -> Dict:
+    """Per-channel subarray occupancy + executable fraction (8 channels)."""
+    amap = AddressMap(
+        DramGeometry(channels=8, subarrays_per_bank=128), BANK_REGION_SCHEME
+    )
+    C = amap.geo.channels
+    out: Dict[str, Dict] = {}
+    for policy, stripe in [("striped", True), ("stacked", False)]:
+        mem = PhysicalMemory(amap, seed=0, n_huge_pages=128, huge_scatter=1.0)
+        al = PumaAllocator(mem, amap, stripe_channels=stripe)
+        al.pim_preallocate(64)
+        # a serving-like mix of operand sizes
+        allocs = [al.pim_alloc(s) for s in (64 * 1024, 128 * 1024, 256 * 1024)]
+
+        # executable rows per owning channel, summed over one op per alloc
+        pud_rows = np.zeros(C, dtype=np.int64)
+        region_rows = np.zeros(C, dtype=np.int64)
+        for a in allocs:
+            t0 = time.perf_counter()
+            plan = pud.plan_rows("zero", [a], amap)
+            us = (time.perf_counter() - t0) * 1e6
+            pud_rows += plan.channel_rows(amap)
+            pas = np.array([e.pa for e in a.extents], dtype=np.int64)
+            nreg = np.array([e.nbytes for e in a.extents]) // amap.region_bytes
+            region_rows += np.bincount(
+                np.repeat(amap.region_channels(pas), nreg), minlength=C
+            )
+        frac = np.divide(
+            pud_rows, region_rows, out=np.ones(C), where=region_rows > 0
+        )
+        rep = al.channel_report()
+        used = np.asarray(rep["used_regions"], dtype=np.float64)
+        occ_balance = float(used.mean() / used.max()) if used.max() else 1.0
+        row_balance = (
+            float(pud_rows.mean() / pud_rows.max()) if pud_rows.max() else 1.0
+        )
+        for c in range(C):
+            emit(f"alloc_channel/{policy}/frac/ch{c}", us, round(frac[c], 3))
+            emit(
+                f"alloc_channel/{policy}/occupancy/ch{c}", 0.0, int(used[c])
+            )
+        emit(f"alloc_channel/{policy}/occupancy_balance", 0.0, occ_balance)
+        emit(f"alloc_channel/{policy}/pud_row_balance", 0.0, row_balance)
+        out[policy] = {
+            "pud_fraction_per_channel": frac.tolist(),
+            "used_regions_per_channel": used.astype(int).tolist(),
+            "occupancy_balance": occ_balance,
+            "pud_row_balance": row_balance,
+        }
+    return out
+
+
 def run(emit: Callable[[str, float, float], None]) -> Dict:
     amap = AddressMap()
     allocators = {
@@ -70,4 +129,5 @@ def run(emit: Callable[[str, float, float], None]) -> Dict:
             us = (time.perf_counter() - t0) * 1e6 / REPS
             emit(f"alloc_fraction/{op}/puma/{bits}b", us, f)
             table.setdefault(f"{op}/puma", {})[bits] = f
+    table["channel_view"] = _channel_view(emit)
     return table

@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
-# Lightweight CI: tier-1 test suite + the translation microbenchmark in
-# smoke mode (persists BENCH_translate.json for the perf trajectory).
+# Lightweight CI: tier-1 test suite + the persisted microbenchmarks in
+# smoke mode (BENCH_translate.json and BENCH_channels.json for the perf
+# trajectory), each gated on its speedup floors.
 #
 #   bash scripts/ci.sh
 set -euo pipefail
@@ -26,6 +27,24 @@ for name, want in [("decode/bank_region", 20), ("decode/cacheline", 20),
     if got < want:
         fails.append(name)
     print(f"  {status}: {name} {got:.1f}x (need >= {want}x)")
+raise SystemExit(1 if fails else 0)
+EOF
+
+echo "== channel scaling (smoke) =="
+PYTHONPATH="src:." python benchmarks/channel_bench.py --smoke
+
+echo "== BENCH_channels.json =="
+python - <<'EOF'
+import json
+rec = json.load(open("BENCH_channels.json"))
+fails = []
+# PUD throughput on striped 8-channel operands must scale >= 4x over 1 ch.
+for name, want in [("scaling/256k/ch8", 4.0), ("contention/ch8", 4.0)]:
+    got = rec[name]["speedup"]
+    status = "ok" if got >= want else "FAIL"
+    if got < want:
+        fails.append(name)
+    print(f"  {status}: {name} {got:.2f}x (need >= {want}x)")
 raise SystemExit(1 if fails else 0)
 EOF
 echo "CI OK"

@@ -1,4 +1,10 @@
-"""Architecture registry: ``get_config(name)`` / ``ARCHS`` (all assigned)."""
+"""Architecture registry: ``get_config(name)`` / ``ARCHS`` (all assigned).
+
+``puma_paper`` is the one non-LM entry: ``get_config("puma_paper")``
+returns a :class:`repro.configs.puma_paper.PumaPaperConfig` — the paper's
+DRAM organization (channel/bank/subarray counts) validated against
+``DramGeometry`` and both interleave schemes at construction.  Use
+``.geometry()`` / ``.address_map()`` on it; ``lm_archs()`` excludes it."""
 from __future__ import annotations
 
 import importlib

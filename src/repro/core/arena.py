@@ -23,6 +23,16 @@ the TPU analogue of the paper's "% of operations executed in PUD".
 
 Baseline policies (``first_fit``, ``random``) mirror malloc/hugepage for the
 benchmark comparison.
+
+Channel striping (``n_channels > 1``): arenas are assigned round-robin to
+channels (``arena % n_channels`` — mirroring the DRAM global-subarray ID
+being channel-innermost), and the PUMA ``alloc`` path stripes a request's
+tiles across channels in contiguous per-channel chunks: round-robin over
+channels, worst-fit arena *within* the channel.  Block tables then spread
+across channels, so the channel-parallel PUD/DMA substrate sees balanced
+per-channel load; :meth:`TilePool.channel_occupancy` reports the balance.
+The default ``n_channels=1`` keeps the original single-pool behaviour
+bit-for-bit.
 """
 from __future__ import annotations
 
@@ -95,11 +105,17 @@ class TilePool:
         tiles_per_arena: int,
         policy: str = "puma",
         seed: int = 0,
+        n_channels: int = 1,
     ):
         assert policy in self.POLICIES, policy
+        assert n_channels >= 1 and n_arenas % n_channels == 0, (
+            f"n_arenas={n_arenas} must be a multiple of n_channels={n_channels}"
+        )
         self.n_arenas = n_arenas
         self.tiles_per_arena = tiles_per_arena
         self.policy = policy
+        self.n_channels = n_channels
+        self._next_channel = 0
         self.rng = random.Random(seed)
         # free slots per arena kept sorted ascending so contiguous runs pop
         # from the front; PUMA's ordered array is the lazy max-heap below.
@@ -110,6 +126,13 @@ class TilePool:
             (-tiles_per_arena, a) for a in range(n_arenas)
         ]
         heapq.heapify(self._heap)
+        # per-channel worst-fit heaps (arena % n_channels = owning channel)
+        self._heap_ch: List[List[tuple]] = [
+            [(-tiles_per_arena, a) for a in range(c, n_arenas, n_channels)]
+            for c in range(n_channels)
+        ]
+        for h in self._heap_ch:
+            heapq.heapify(h)
         self._handles: Dict[int, TileHandle] = {}
         self._next_hid = 1
         self.stats = PoolStats()
@@ -123,14 +146,21 @@ class TilePool:
         return sum(len(f) for f in self._free)
 
     def _push_count(self, arena: int) -> None:
-        heapq.heappush(self._heap, (-len(self._free[arena]), arena))
+        entry = (-len(self._free[arena]), arena)
+        heapq.heappush(self._heap, entry)
+        if self.n_channels > 1:
+            heapq.heappush(self._heap_ch[arena % self.n_channels], entry)
 
-    def _worst_fit_arena(self) -> Optional[int]:
-        while self._heap:
-            neg, a = self._heap[0]
+    def _worst_fit_arena(self, channel: Optional[int] = None) -> Optional[int]:
+        if channel is None or self.n_channels == 1:
+            heap = self._heap
+        else:
+            heap = self._heap_ch[channel]
+        while heap:
+            neg, a = heap[0]
             if len(self._free[a]) == -neg and -neg > 0:
                 return a
-            heapq.heappop(self._heap)
+            heapq.heappop(heap)
         return None
 
     def _take_slot(self, arena: int, slot: Optional[int] = None) -> Optional[int]:
@@ -191,12 +221,36 @@ class TilePool:
             return None
         tiles: List[int] = []
         if self.policy == "puma":
-            while len(tiles) < n_tiles:
-                a = self._worst_fit_arena()
-                got = self._take_run(a, n_tiles - len(tiles))
-                if not got:  # arena raced empty via stale heap entry
-                    continue
-                tiles.extend(got)
+            if self.n_channels > 1:
+                # channel-striped PUMA: hand each channel a contiguous chunk
+                # (round-robin over channels, worst-fit arena within), so the
+                # handle's blocks spread evenly over the channel-parallel
+                # substrate while each chunk stays one DMA descriptor.
+                chunk = -(-n_tiles // self.n_channels)
+                while len(tiles) < n_tiles:
+                    got: List[int] = []
+                    for _ in range(self.n_channels):
+                        ch = self._next_channel
+                        self._next_channel = (ch + 1) % self.n_channels
+                        a = self._worst_fit_arena(channel=ch)
+                        if a is None:
+                            continue
+                        got = self._take_run(a, min(chunk, n_tiles - len(tiles)))
+                        if got:
+                            break
+                    if not got:  # cannot happen given the free_tiles gate
+                        for t in tiles:
+                            self._give_back(t)
+                        self.stats.failed += 1
+                        return None
+                    tiles.extend(got)
+            else:
+                while len(tiles) < n_tiles:
+                    a = self._worst_fit_arena()
+                    got = self._take_run(a, n_tiles - len(tiles))
+                    if not got:  # arena raced empty via stale heap entry
+                        continue
+                    tiles.extend(got)
         elif self.policy == "first_fit":
             for a in range(self.n_arenas):
                 while len(tiles) < n_tiles:
@@ -326,6 +380,27 @@ class TilePool:
         self.stats.frees += 1
 
     # -- metrics ---------------------------------------------------------------
+    def channel_occupancy(self) -> Dict[str, object]:
+        """Per-channel used/free tile counts + load balance.
+
+        ``balance`` is mean/max of per-channel used tiles (1.0 = perfectly
+        striped block tables, 1/C = all live blocks on one channel).
+        """
+        used = [0] * self.n_channels
+        free = [0] * self.n_channels
+        for a, fr in enumerate(self._free):
+            c = a % self.n_channels
+            free[c] += len(fr)
+            used[c] += self.tiles_per_arena - len(fr)
+        mx = max(used) if used else 0
+        balance = (sum(used) / len(used)) / mx if mx > 0 else 1.0
+        return {
+            "channels": self.n_channels,
+            "used_tiles": used,
+            "free_tiles": free,
+            "balance": float(balance),
+        }
+
     def fragmentation(self) -> float:
         """1 - (largest free run / total free) across the pool."""
         total = self.free_tiles()

@@ -45,6 +45,30 @@ per region, built lazily on first use) for O(1) repeated scalar lookups.
 The scalar :meth:`AddressMap.region_subarray` keeps the original
 one-address-at-a-time decode; property tests assert the two paths agree
 under every interleave scheme.
+
+Channel view
+------------
+
+The PUD executor is channel-parallel (one memory controller per channel,
+HBM-PIM style — see :mod:`repro.core.controller`), so the decode layer also
+exposes the *channel* structure of the global-subarray space:
+
+* :meth:`AddressMap.region_coords` — one vectorized pass producing the
+  ``(channel, rank, bank, subarray)`` arrays for a batch of region PAs;
+* :meth:`AddressMap.region_channels` — just the owning-channel array;
+* :meth:`AddressMap.channel_of_subarray` — recover the channel from a
+  global subarray ID without re-decoding.  The global ID is built
+  channel-innermost (``((sa·B + bank)·R + rank)·C + channel``), so the
+  channel is simply ``gsa % channels`` — scalar ints and numpy arrays both
+  work.
+
+Under ``BANK_REGION_SCHEME`` every region is owned by exactly one channel
+and the PUD executor can run regions of different channels concurrently.
+Under ``CACHELINE_INTERLEAVED_SCHEME`` a region *is* a stripe across all
+channels (the channel bits sit below the region boundary and decode to 0),
+so each row op already engages every channel at once and the partitioned
+executor degenerates to the single-queue model — exactly the hardware
+behaviour.
 """
 from __future__ import annotations
 
@@ -127,6 +151,20 @@ class DramGeometry:
             * self.banks_per_rank
             * self.subarrays_per_bank
         )
+
+    @property
+    def banks_per_channel(self) -> int:
+        """Banks one channel's controller schedules across (rank x bank)."""
+        return self.ranks_per_channel * self.banks_per_rank
+
+    @property
+    def subarrays_per_channel(self) -> int:
+        """Global subarrays owned by one channel's controller."""
+        return self.num_global_subarrays // self.channels
+
+    @property
+    def channel_bytes(self) -> int:
+        return self.total_bytes // self.channels
 
     def __post_init__(self):
         for f in dataclasses.fields(self):
@@ -306,6 +344,47 @@ class AddressMap:
         sa = row >> self._log_rows_per_sub
         g = (sa * geo.banks_per_rank + bank) * geo.ranks_per_channel + rank
         return g * geo.channels + chan
+
+    def region_coords(
+        self, pas: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Batch decode of ``(channel, rank, bank, subarray)`` per region PA.
+
+        One vectorized pass (same bit-ops as :meth:`region_subarrays`, fields
+        kept separate instead of concatenated) — the view the per-channel
+        controllers and the channel-striping allocators consume.  Sub-region
+        bits are ignored, so inputs need not be region-aligned.
+        """
+        pas = np.asarray(pas, dtype=np.int64)
+        sh, mk = self._shifts, self._masks
+        row = (pas >> sh["row"]) & mk["row"]
+        bank = (pas >> sh["bank"]) & mk["bank"]
+        if self.scheme.xor_row_into_bank:
+            bank = bank ^ (row & (self.geo.banks_per_rank - 1))
+        rank = (pas >> sh["rank"]) & mk["rank"]
+        chan = (pas >> sh["channel"]) & mk["channel"]
+        sa = row >> self._log_rows_per_sub
+        return chan, rank, bank, sa
+
+    def region_channels(self, pas: np.ndarray) -> np.ndarray:
+        """Owning channel of each region PA (vectorized).
+
+        Under BANK_REGION_SCHEME this is the single channel that executes
+        PUD ops on the region; under CACHELINE_INTERLEAVED_SCHEME region
+        bases zero the channel bits, so every region reports channel 0 — a
+        region there is a stripe across *all* channels and the channel-
+        partitioned executor collapses to one queue by construction.
+        """
+        pas = np.asarray(pas, dtype=np.int64)
+        return (pas >> self._shifts["channel"]) & self._masks["channel"]
+
+    def channel_of_subarray(self, gsa):
+        """Channel owning a global subarray ID (scalar int or ndarray).
+
+        ``DramCoord.global_subarray`` concatenates channel-innermost, so the
+        channel is the low ``log2(channels)`` bits — no re-decode needed.
+        """
+        return gsa % self.geo.channels
 
     def region_subarray_table(self) -> np.ndarray:
         """Memoized region-index → global-subarray lookup (int32, lazy).

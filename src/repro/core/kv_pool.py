@@ -41,6 +41,7 @@ class KVPoolConfig:
     max_seqs: int = 64
     max_blocks_per_seq: int = 256
     blocks_per_arena: int = 64      # "subarray" capacity
+    n_channels: int = 1             # memory channels the arenas stripe over
     policy: str = "puma"
     dtype: str = "bfloat16"
 
@@ -49,13 +50,24 @@ class KVPoolConfig:
         assert self.num_blocks % self.blocks_per_arena == 0
         return self.num_blocks // self.blocks_per_arena
 
+    def __post_init__(self):
+        n_arenas = self.num_blocks // self.blocks_per_arena
+        if self.n_channels < 1 or n_arenas % self.n_channels:
+            raise ValueError(
+                f"n_channels={self.n_channels} must divide "
+                f"n_arenas={n_arenas} (num_blocks/blocks_per_arena)"
+            )
+
 
 class PagedKVPool:
     """Host bookkeeping + device buffers for paged KV serving."""
 
     def __init__(self, cfg: KVPoolConfig):
         self.cfg = cfg
-        self.pool = TilePool(cfg.n_arenas, cfg.blocks_per_arena, cfg.policy)
+        self.pool = TilePool(
+            cfg.n_arenas, cfg.blocks_per_arena, cfg.policy,
+            n_channels=cfg.n_channels,
+        )
         dt = jnp.dtype(cfg.dtype)
         shape = (cfg.n_layers, cfg.num_blocks, cfg.block_size, cfg.kv_heads, cfg.head_dim)
         self.k = jnp.zeros(shape, dt)
@@ -173,14 +185,24 @@ class PagedKVPool:
 
     # -- PUMA metric --------------------------------------------------------------
     def contiguity_report(self) -> Dict[str, float]:
-        """Pool-wide contiguous-run statistics (the paper's '% in PUD' analogue)."""
+        """Pool-wide contiguous-run statistics (the paper's '% in PUD'
+        analogue) plus the channel figure of merit: ``channel_balance`` is
+        mean/max used blocks per channel (1.0 = block tables perfectly
+        striped across the channel-parallel substrate)."""
         fracs, runs, tiles = [], 0, 0
         for h, _ in self._seqs.values():
             fracs.append(h.contiguous_run_fraction())
             runs += len(h.runs())
             tiles += len(h.tiles)
+        occ = self.pool.channel_occupancy()
         return {
             "mean_contiguous_fraction": float(np.mean(fracs)) if fracs else 1.0,
             "descriptors_per_tile": runs / tiles if tiles else 0.0,
             "live_seqs": float(len(self._seqs)),
+            "channels": float(occ["channels"]),
+            "channel_balance": float(occ["balance"]),
         }
+
+    def channel_occupancy(self) -> Dict[str, object]:
+        """Per-channel used/free block counts (detail behind the balance)."""
+        return self.pool.channel_occupancy()

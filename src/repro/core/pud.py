@@ -35,6 +35,33 @@ with it).  Executability is then a vectorized equality across operand
 tables.  ``execute_op`` walks :meth:`Allocation.runs` so every physically
 contiguous run moves as one slice instead of byte-by-byte ``pa_of`` probing.
 Property tests pin both fast paths to the original scalar semantics.
+
+Channel-partitioned execution
+-----------------------------
+
+The substrate is channel-parallel: every channel has its own memory
+controller (:mod:`repro.core.controller`) and PUD rows living in different
+channels execute concurrently.  :class:`RowPlan` therefore also records the
+*global subarray per row* (``subarrays``; the owning channel is
+``gsa % channels``), and:
+
+* ``simulate_op`` partitions the PUD rows by owning channel (one
+  ``bincount``) and prices the in-DRAM part as ``max`` over per-channel row
+  counts x per-row AAP cost instead of a serial sum — a RowClone copy
+  striped over 8 channels finishes ~8x faster.  With a
+  :class:`~repro.core.controller.DramController` passed in, the op is
+  additionally queued on the controllers' ``busy_until`` frontiers, so
+  back-to-back ops contending for one channel visibly serialize and mode
+  switches (PUD interleaved with normal traffic) are charged.
+* ``execute_op`` walks the row list channel by channel — the functional
+  result is unchanged (rows are disjoint), but the dispatch order mirrors
+  the per-channel command streams and, with a controller, records the same
+  timing.
+
+At ``channels=1`` both collapse bit-for-bit to the original single-channel
+serial model (``max`` over one channel *is* the total row count); property
+tests in ``tests/test_pud.py`` pin that equivalence under both interleave
+schemes.
 """
 from __future__ import annotations
 
@@ -44,6 +71,7 @@ from typing import Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.allocators import Allocation
+from repro.core.controller import DramController, channel_row_counts
 from repro.core.dram import AddressMap
 
 __all__ = [
@@ -101,12 +129,26 @@ class RowPlan:
     n_rows: int                 # full rows in the logical buffers
     in_pud: List[bool]          # len n_rows
     tail_bytes: int             # sub-row remainder (always CPU)
+    #: global subarray per row (shared by all operands on PUD rows; -1 on
+    #: CPU rows).  The owning channel is ``subarrays[r] % channels`` — what
+    #: the channel-partitioned executor and the controllers dispatch on.
+    subarrays: Optional[np.ndarray] = None
 
     @property
     def pud_fraction(self) -> float:
         if self.n_rows == 0:
             return 0.0
         return sum(self.in_pud) / self.n_rows
+
+    def pud_subarrays(self) -> np.ndarray:
+        """Global subarray of each PUD row (non-PUD rows dropped)."""
+        if self.subarrays is None:
+            return np.empty(0, dtype=np.int64)
+        return self.subarrays[self.subarrays >= 0]
+
+    def channel_rows(self, amap: AddressMap) -> np.ndarray:
+        """PUD rows per owning channel (len = geometry's channel count)."""
+        return channel_row_counts(self.pud_subarrays(), amap)
 
 
 def _row_subarray(
@@ -169,14 +211,22 @@ def plan_rows(
     n_full, tail = divmod(size, region)
     n_rows = n_full + (1 if tail else 0)
     if n_rows == 0:
-        return RowPlan(n_rows=0, in_pud=[], tail_bytes=0)
+        return RowPlan(
+            n_rows=0, in_pud=[], tail_bytes=0,
+            subarrays=np.empty(0, dtype=np.int64),
+        )
     tables = [row_subarray_table(a, amap)[:n_rows] for a in operands]
     ok = tables[0] != -1
     for t in tables[1:]:
         ok = ok & (t == tables[0])
     in_pud = ok.tolist()
     tail_bytes = 0 if (not tail or in_pud[-1]) else tail
-    return RowPlan(n_rows=n_rows, in_pud=in_pud, tail_bytes=tail_bytes)
+    # on PUD rows every operand shares operand 0's subarray by construction
+    subarrays = np.where(ok, tables[0], -1).astype(np.int64)
+    return RowPlan(
+        n_rows=n_rows, in_pud=in_pud, tail_bytes=tail_bytes,
+        subarrays=subarrays,
+    )
 
 
 @dataclasses.dataclass
@@ -186,10 +236,22 @@ class SimResult:
     pud_fraction: float
     t_ns: float          # time with the PUD substrate available
     t_cpu_ns: float      # time if everything ran on the CPU
+    #: PUD rows dispatched per channel (len = geometry channel count);
+    #: None when the op took the pure-CPU path.
+    rows_per_channel: Optional[List[int]] = None
 
     @property
     def speedup_vs_cpu(self) -> float:
         return self.t_cpu_ns / self.t_ns if self.t_ns > 0 else float("inf")
+
+    @property
+    def channel_balance(self) -> float:
+        """mean/max PUD rows across channels (1.0 = perfectly striped)."""
+        if not self.rows_per_channel:
+            return 1.0
+        rows = np.asarray(self.rows_per_channel, dtype=np.float64)
+        mx = rows.max()
+        return float(rows.mean() / mx) if mx > 0 else 1.0
 
 
 def simulate_op(
@@ -198,10 +260,21 @@ def simulate_op(
     amap: AddressMap,
     model: PudCostModel = PudCostModel(),
     adaptive: bool = True,
+    controller: Optional[DramController] = None,
 ) -> SimResult:
     """Price one op.  ``adaptive`` (beyond-paper refinement): the PUD driver
     knows both cost models and only offloads when DRAM execution is cheaper —
-    sub-row ops stay on the CPU, so PUMA never *loses* to the baseline."""
+    sub-row ops stay on the CPU, so PUMA never *loses* to the baseline.
+
+    The in-DRAM part executes channel-parallel: PUD rows are partitioned by
+    owning channel and the burst costs ``max`` over per-channel row counts
+    (at ``channels=1`` this is exactly the old serial sum).  Passing a
+    ``controller`` additionally queues the burst on the per-channel
+    ``busy_until`` frontiers — contention with earlier ops and SB<->PIM mode
+    switches then show up in ``t_ns``, and the dispatch advances the
+    controller state (unless the adaptive driver picks the CPU, in which
+    case the queues are left untouched).
+    """
     plan = plan_rows(op, operands, amap)
     region = amap.region_bytes
     size = min(a.size for a in operands)
@@ -213,7 +286,20 @@ def simulate_op(
     cpu_bytes = cpu_rows * region
     if plan.tail_bytes:  # last row is a CPU partial row, not a full region
         cpu_bytes += plan.tail_bytes - region
-    t = pud_rows * model.pud_row_ns(op)
+
+    rows_per_channel: Optional[List[int]] = None
+    row_ns = model.pud_row_ns(op)
+    if pud_rows:
+        if controller is not None:
+            est = controller.peek_pud(plan.pud_subarrays(), row_ns)
+            t = est.latency_ns
+            rows_per_channel = est.rows_per_channel
+        else:
+            counts = plan.channel_rows(amap)
+            t = int(counts.max()) * row_ns
+            rows_per_channel = counts.tolist()
+    else:
+        t = 0.0
     if cpu_rows:
         t += model.cpu_op_overhead_ns
         t += model.cpu_ns(op, cpu_bytes, cpu_rows)
@@ -223,7 +309,10 @@ def simulate_op(
     t_cpu = model.cpu_op_overhead_ns + model.cpu_ns(op, size, max(plan.n_rows, 1))
     if adaptive and t > t_cpu:
         t = t_cpu
-    return SimResult(op, size, plan.pud_fraction, t, t_cpu)
+        rows_per_channel = None  # driver picked the CPU: nothing dispatched
+    elif pud_rows and controller is not None:
+        controller.dispatch_pud(plan.pud_subarrays(), row_ns)
+    return SimResult(op, size, plan.pud_fraction, t, t_cpu, rows_per_channel)
 
 
 # ---------------------------------------------------------------------------
@@ -252,6 +341,8 @@ def execute_op(
     operands: Sequence[Allocation],
     phys: np.ndarray,
     amap: AddressMap,
+    controller: Optional[DramController] = None,
+    model: Optional[PudCostModel] = None,
 ) -> RowPlan:
     """Execute ``op`` with dst = operands[-1], srcs = operands[:-1].
 
@@ -260,6 +351,13 @@ def execute_op(
     the "CPU".  Both paths write the same bytes — the point is to validate
     that the *dispatch plan* is sound, which tests assert by comparing
     against a whole-buffer numpy op.
+
+    Dispatch order mirrors the hardware's per-channel command streams: PUD
+    rows are partitioned by owning channel and each channel's rows issue as
+    one burst (rows are disjoint regions, so the bytes are identical to the
+    row-index order the single-channel model used).  CPU rows follow.  With
+    a ``controller``, the same partition is queued on the per-channel
+    frontiers so execution traffic shows up in the occupancy report.
     """
     plan = plan_rows(op, operands, amap)
     region = amap.region_bytes
@@ -280,7 +378,7 @@ def execute_op(
             phys[pa : pa + run] = buf[done : done + run]
             done += run
 
-    for r in range(plan.n_rows):
+    def do_row(r: int) -> None:
         off = r * region
         # PUD rows operate on the full (owned, padded) region; the final CPU
         # row only touches the real tail bytes.
@@ -291,4 +389,21 @@ def execute_op(
         out = np.empty(n, np.uint8)
         _apply_rowwise(op, out, src_rows)
         write(dst, off, out)
+
+    if plan.n_rows:
+        rows = np.arange(plan.n_rows)
+        in_pud = np.asarray(plan.in_pud, dtype=bool)
+        chans = np.where(
+            in_pud, amap.channel_of_subarray(plan.subarrays), -1
+        )
+        # one burst per channel, in channel order; CPU rows (chan == -1) last
+        for c in range(amap.geo.channels):
+            for r in rows[chans == c].tolist():
+                do_row(r)
+        for r in rows[chans == -1].tolist():
+            do_row(r)
+        if controller is not None and in_pud.any():
+            controller.dispatch_pud(
+                plan.pud_subarrays(), (model or PudCostModel()).pud_row_ns(op)
+            )
     return plan

@@ -52,18 +52,34 @@ class _OrderedArray:
     allocator, where each entry represents the number of memory regions in a
     single subarray".  We keep (a) a free-list per subarray and (b) a lazy
     max-heap over (count, subarray) for O(log S) worst-fit.
+
+    With ``channels > 1`` the same bookkeeping is additionally sliced per
+    channel (a subarray's channel is ``sa % channels`` — the global ID is
+    channel-innermost): one lazy max-heap and one running total per channel,
+    so :meth:`worst_fit_subarray` can answer "emptiest subarray *of channel
+    c*" in O(log S) for the channel-striping allocation path.
     """
 
-    def __init__(self):
+    def __init__(self, channels: int = 1):
+        self.channels = channels
         self.free: Dict[int, List[int]] = {}   # subarray -> region PAs (LIFO)
         self._heap: List[tuple] = []           # (-count, subarray), lazy
+        self._heap_ch: List[List[tuple]] = [[] for _ in range(channels)]
         self._total = 0                        # running free-region count
+        self._total_ch = [0] * channels
+
+    def _push(self, subarray: int) -> None:
+        entry = (-len(self.free.get(subarray, ())), subarray)
+        heapq.heappush(self._heap, entry)
+        if self.channels > 1:
+            heapq.heappush(self._heap_ch[subarray % self.channels], entry)
 
     def add_region(self, subarray: int, pa: int) -> None:
         lst = self.free.setdefault(subarray, [])
         lst.append(pa)
-        heapq.heappush(self._heap, (-len(lst), subarray))
+        self._push(subarray)
         self._total += 1
+        self._total_ch[subarray % self.channels] += 1
 
     def add_regions(self, subarrays: np.ndarray, pas: np.ndarray) -> None:
         """Bulk insert: group by subarray, extend each free list once, and
@@ -79,29 +95,48 @@ class _OrderedArray:
             sa = int(sas[start])
             lst = self.free.setdefault(sa, [])
             lst.extend(ps[start:stop].tolist())
-            heapq.heappush(self._heap, (-len(lst), sa))
+            self._push(sa)
         self._total += len(ps)
+        if self.channels > 1:
+            counts = np.bincount(
+                sas % self.channels, minlength=self.channels
+            )
+            for c in range(self.channels):
+                self._total_ch[c] += int(counts[c])
+        else:
+            self._total_ch[0] += len(ps)
 
     def take_from(self, subarray: int) -> Optional[int]:
         lst = self.free.get(subarray)
         if not lst:
             return None
         pa = lst.pop()
-        heapq.heappush(self._heap, (-len(lst), subarray))
+        self._push(subarray)
         self._total -= 1
+        self._total_ch[subarray % self.channels] -= 1
         return pa
 
-    def worst_fit_subarray(self) -> Optional[int]:
-        """Subarray with the largest number of free regions (lazy heap)."""
-        while self._heap:
-            neg, sa = self._heap[0]
+    def worst_fit_subarray(self, channel: Optional[int] = None) -> Optional[int]:
+        """Subarray with the largest number of free regions (lazy heap);
+        restricted to one channel's subarrays when ``channel`` is given."""
+        # channels == 1: the global view IS channel 0's view (and _push
+        # skips the per-channel heaps to keep preallocation cheap)
+        if channel is None or self.channels == 1:
+            heap = self._heap
+        else:
+            heap = self._heap_ch[channel]
+        while heap:
+            neg, sa = heap[0]
             if len(self.free.get(sa, ())) == -neg and -neg > 0:
                 return sa
-            heapq.heappop(self._heap)  # stale entry
+            heapq.heappop(heap)  # stale entry
         return None
 
-    def total_free(self) -> int:
-        return self._total
+    def total_free(self, channel: Optional[int] = None) -> int:
+        return self._total if channel is None else self._total_ch[channel]
+
+    def channel_free(self) -> List[int]:
+        return list(self._total_ch)
 
     def free_counts(self) -> Dict[int, int]:
         return {sa: len(v) for sa, v in self.free.items() if v}
@@ -110,11 +145,26 @@ class _OrderedArray:
 class PumaAllocator:
     name = "puma"
 
-    def __init__(self, mem: PhysicalMemory, amap: Optional[AddressMap] = None):
+    def __init__(
+        self,
+        mem: PhysicalMemory,
+        amap: Optional[AddressMap] = None,
+        *,
+        stripe_channels: bool = False,
+    ):
         self.mem = mem
         self.amap = amap or mem.amap
         self.region_bytes = self.amap.region_bytes
-        self._ordered = _OrderedArray()
+        self.n_channels = self.amap.geo.channels
+        #: stripe first allocations round-robin across channels (worst-fit
+        #: *within* each channel) so consecutive logical rows land on
+        #: different channels and the channel-parallel PUD executor scales.
+        #: Off by default — and a no-op at channels=1 — so the paper's
+        #: single-channel placement is untouched.
+        self.stripe_channels = stripe_channels
+        self._next_channel = 0
+        self._ordered = _OrderedArray(self.n_channels)
+        self._used_per_channel = np.zeros(self.n_channels, dtype=np.int64)
         self._allocations: Dict[int, Allocation] = {}  # the allocation hashmap
         self._regions_of: Dict[int, List[int]] = {}    # va -> region PAs
         self._va_next = 0x7000_0000_0000
@@ -156,6 +206,13 @@ class PumaAllocator:
         self._regions_of[va] = region_pas
         self.stats.live_allocations += 1
         self.stats.regions_in_use += len(region_pas)
+        if self.n_channels > 1:
+            self._used_per_channel += np.bincount(
+                self.amap.region_channels(np.asarray(region_pas, np.int64)),
+                minlength=self.n_channels,
+            )
+        else:
+            self._used_per_channel[0] += len(region_pas)
         return alloc
 
     def _release(self, region_pas: List[int]) -> None:
@@ -163,6 +220,12 @@ class PumaAllocator:
             return
         pas = np.asarray(region_pas, dtype=np.int64)
         self._ordered.add_regions(self.amap.region_subarrays(pas), pas)
+        if self.n_channels > 1:
+            self._used_per_channel -= np.bincount(
+                self.amap.region_channels(pas), minlength=self.n_channels
+            )
+        else:
+            self._used_per_channel[0] -= len(pas)
 
     # -- 2) first allocation: worst-fit (paper step (2)) ----------------------
     def pim_alloc(self, size: int) -> Optional[Allocation]:
@@ -170,6 +233,8 @@ class PumaAllocator:
         if need > self._ordered.total_free():
             self.stats.failed_allocs += 1
             return None
+        if self.stripe_channels and self.n_channels > 1:
+            return self._pim_alloc_striped(size, need)
         got: List[int] = []
         while len(got) < need:
             sa = self._ordered.worst_fit_subarray()
@@ -183,6 +248,31 @@ class PumaAllocator:
                 if pa is None:
                     break
                 got.append(pa)
+        return self._mk_allocation(size, got)
+
+    def _pim_alloc_striped(self, size: int, need: int) -> Optional[Allocation]:
+        """Channel-striped worst-fit: region ``k`` comes from the next
+        channel in round-robin order (skipping exhausted channels), from
+        that channel's emptiest subarray.  Consecutive logical rows then
+        live on different channels, so one PUD op's row list partitions
+        ~evenly across the per-channel controllers."""
+        got: List[int] = []
+        while len(got) < need:
+            pa = None
+            for _ in range(self.n_channels):
+                ch = self._next_channel
+                self._next_channel = (ch + 1) % self.n_channels
+                sa = self._ordered.worst_fit_subarray(channel=ch)
+                if sa is None:
+                    continue
+                pa = self._ordered.take_from(sa)
+                if pa is not None:
+                    break
+            if pa is None:  # cannot happen given the total_free gate
+                self._release(got)
+                self.stats.failed_allocs += 1
+                return None
+            got.append(pa)
         return self._mk_allocation(size, got)
 
     # -- 3) aligned allocation (paper step (3)) -------------------------------
@@ -241,6 +331,22 @@ class PumaAllocator:
 
     def free_counts(self) -> Dict[int, int]:
         return self._ordered.free_counts()
+
+    def channel_report(self) -> Dict[str, object]:
+        """Per-channel pool state — the placement-balance figure of merit.
+
+        ``used_balance`` is mean/max of per-channel in-use region counts:
+        1.0 means live allocations are perfectly striped across channels,
+        1/C means everything sits on one channel (no PUD parallelism).
+        """
+        used = self._used_per_channel
+        mx = int(used.max()) if used.size else 0
+        return {
+            "channels": self.n_channels,
+            "free_regions": self._ordered.channel_free(),
+            "used_regions": used.tolist(),
+            "used_balance": float(used.mean() / mx) if mx > 0 else 1.0,
+        }
 
     # uniform interface with the baseline allocators
     def alloc(self, size: int) -> Allocation:

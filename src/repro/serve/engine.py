@@ -13,7 +13,12 @@ Lifecycle per step:
      (``extend`` keeps arena locality), finished sequences release blocks.
 
 Metrics surface the paper's figure of merit: block-table contiguity (the
-"% executable in PUD" analogue) plus throughput counters.
+"% executable in PUD" analogue) plus throughput counters.  With
+``KVPoolConfig.n_channels > 1`` the pool stripes each request's blocks
+round-robin across memory channels (contiguous per-channel chunks), and
+``metrics()``/``channel_occupancy()`` additionally report the per-channel
+block occupancy and its load balance — the serving-side view of the
+channel-parallel PUD substrate in :mod:`repro.core.controller`.
 """
 from __future__ import annotations
 
@@ -160,3 +165,7 @@ class ServeEngine:
             align_misses=float(self.pool.pool.stats.align_misses),
         )
         return rep
+
+    def channel_occupancy(self) -> Dict[str, object]:
+        """Per-channel block occupancy of the paged KV pool."""
+        return self.pool.channel_occupancy()

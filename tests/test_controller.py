@@ -1,0 +1,170 @@
+"""Controller model: per-channel queues, FR-FCFS-lite pricing, PUD dispatch."""
+import numpy as np
+import pytest
+
+from repro.core import pud
+from repro.core.allocators import PhysicalMemory
+from repro.core.controller import (
+    ChannelController,
+    ControllerConfig,
+    DramController,
+    channel_row_counts,
+)
+from repro.core.dram import (
+    AddressMap,
+    BANK_REGION_SCHEME,
+    CACHELINE_INTERLEAVED_SCHEME,
+    DramGeometry,
+)
+from repro.core.puma import PumaAllocator
+
+CFG = ControllerConfig()
+GEO8 = DramGeometry(channels=8, subarrays_per_bank=16)   # 1 GB
+AMAP8 = AddressMap(GEO8, BANK_REGION_SCHEME)
+
+
+def test_channel_row_counts_matches_scalar():
+    rng = np.random.default_rng(0)
+    gsa = rng.integers(0, GEO8.num_global_subarrays, 1000, dtype=np.int64)
+    got = channel_row_counts(gsa, AMAP8)
+    want = [0] * GEO8.channels
+    for g in gsa.tolist():
+        want[g % GEO8.channels] += 1
+    assert got.tolist() == want
+    assert got.sum() == len(gsa)
+
+
+def test_enqueue_pud_serializes_on_one_channel():
+    ch = ChannelController(0, CFG)
+    t1 = ch.enqueue_pud(10, 90.0, now_ns=0.0)
+    assert t1 == CFG.mode_switch_ns + 10 * 90.0   # SB -> PIM once
+    t2 = ch.enqueue_pud(5, 90.0, now_ns=0.0)      # already PIM, queued behind
+    assert t2 == t1 + 5 * 90.0
+    assert ch.stats.mode_switches == 1
+    assert ch.stats.pud_rows == 15
+
+
+def test_mode_switches_charged_on_transitions():
+    ch = ChannelController(0, CFG)
+    t = ch.enqueue_pud(1, 90.0, now_ns=0.0)            # SB -> PIM
+    t = ch.enqueue_accesses([(0, 0)], now_ns=t)        # PIM -> SB
+    t = ch.enqueue_pud(1, 90.0, now_ns=t)              # SB -> PIM again
+    assert ch.stats.mode_switches == 3
+    assert t == 3 * CFG.mode_switch_ns + 2 * 90.0 + CFG.row_miss_ns
+
+
+def test_fr_fcfs_row_hits_and_open_rows():
+    ch = ChannelController(0, CFG)
+    # 4 accesses to one row: 1 activation + 3 CAS
+    t1 = ch.enqueue_accesses([(0, 7)] * 4)
+    assert t1 == CFG.row_miss_ns + 3 * CFG.row_hit_ns
+    assert (ch.stats.row_hits, ch.stats.row_misses) == (3, 1)
+    # row 7 is still open in bank 0: pure hit
+    t2 = ch.enqueue_accesses([(0, 7)], now_ns=t1)
+    assert t2 == t1 + CFG.row_hit_ns
+    # a PUD burst closes the row buffers: same access misses again
+    t3 = ch.enqueue_pud(1, 90.0, now_ns=t2)
+    t4 = ch.enqueue_accesses([(0, 7)], now_ns=t3)
+    assert t4 == t3 + CFG.mode_switch_ns + CFG.row_miss_ns
+
+
+def test_peek_pud_does_not_mutate():
+    ch = ChannelController(0, CFG)
+    est = ch.peek_pud(10, 90.0, now_ns=0.0)
+    assert est == CFG.mode_switch_ns + 10 * 90.0
+    assert ch.busy_until_ns == 0.0 and ch.mode == ch.SB
+    assert ch.stats.pud_rows == 0
+    assert ch.enqueue_pud(10, 90.0, now_ns=0.0) == est  # peek was exact
+    # in PIM mode the peek drops the switch cost
+    assert ch.peek_pud(1, 90.0, now_ns=0.0) == ch.busy_until_ns + 90.0
+
+
+def test_dispatch_pud_max_over_channels():
+    ctrl = DramController(AMAP8, CFG)
+    # 8 rows striped over all channels vs 8 rows on channel 0
+    striped = np.arange(8, dtype=np.int64)          # gsa % 8 covers 0..7
+    stacked = np.zeros(8, dtype=np.int64)           # all channel 0
+    d1 = ctrl.peek_pud(striped, 90.0)
+    d2 = ctrl.peek_pud(stacked, 90.0)
+    assert d1.latency_ns == CFG.mode_switch_ns + 1 * 90.0
+    assert d2.latency_ns == CFG.mode_switch_ns + 8 * 90.0
+    assert d1.balance == 1.0
+    assert d2.balance == pytest.approx(1 / 8)
+    got = ctrl.dispatch_pud(striped, 90.0)
+    assert got.done_ns == d1.done_ns
+    assert ctrl.now_ns == got.done_ns
+    # a second striped op queues behind the first on every channel
+    got2 = ctrl.dispatch_pud(striped, 90.0)
+    assert got2.done_ns == got.done_ns + 90.0       # channels already in PIM
+
+
+def test_dispatch_accesses_partitions_by_channel():
+    ctrl = DramController(AMAP8, CFG)
+    # one cacheline in each channel: all misses, priced in parallel
+    pas = np.array(
+        [c << AMAP8._shifts["channel"] for c in range(8)], dtype=np.int64
+    )
+    done = ctrl.dispatch_accesses(pas)
+    assert done == CFG.row_miss_ns   # SB already; one activation per channel
+    rep = ctrl.occupancy_report()
+    assert rep["channels"] == 8
+    assert all(b == CFG.row_miss_ns for b in rep["busy_ns"])
+
+
+def test_occupancy_report_balance():
+    ctrl = DramController(AMAP8, CFG)
+    ctrl.dispatch_pud(np.arange(64, dtype=np.int64), 90.0)
+    rep = ctrl.occupancy_report()
+    assert rep["pud_rows"] == [8] * 8
+    assert rep["pud_row_balance"] == 1.0
+    assert rep["makespan_ns"] == ctrl.now_ns > 0
+    assert rep["mode_switches"] == [1] * 8
+    assert all(0 < f <= 1.0 for f in rep["busy_fraction"])
+
+
+def test_simulate_op_with_controller_charges_contention():
+    """Back-to-back ops on the same operands serialize through the queues;
+    without a controller each op is priced against an idle device."""
+    mem = PhysicalMemory(AMAP8, seed=0, n_huge_pages=64, huge_scatter=1.0)
+    alloc = PumaAllocator(mem, stripe_channels=True)
+    alloc.pim_preallocate(32)
+    a = alloc.pim_alloc(256 * 1024)
+    ctrl = DramController(AMAP8, CFG)
+    r1 = pud.simulate_op("zero", [a], AMAP8, controller=ctrl, adaptive=False)
+    span1 = ctrl.now_ns
+    r2 = pud.simulate_op("zero", [a], AMAP8, controller=ctrl, adaptive=False)
+    free = pud.simulate_op("zero", [a], AMAP8, adaptive=False)
+    assert r1.rows_per_channel == r2.rows_per_channel == free.rows_per_channel
+    burst = max(free.rows_per_channel) * pud.PudCostModel().pud_row_ns("zero")
+    # first burst pays the SB->PIM switch; the second queues behind it and
+    # pays none — the makespan accumulates both bursts back to back
+    assert span1 == CFG.mode_switch_ns + burst
+    assert ctrl.now_ns == span1 + burst
+    assert r1.t_ns - r2.t_ns == CFG.mode_switch_ns
+
+
+def test_adaptive_cpu_pick_leaves_queues_untouched():
+    mem = PhysicalMemory(AMAP8, seed=0, n_huge_pages=64, huge_scatter=1.0)
+    alloc = PumaAllocator(mem, stripe_channels=True)
+    alloc.pim_preallocate(8)
+    a = alloc.pim_alloc(64)           # sub-row: CPU always wins
+    ctrl = DramController(AMAP8, CFG)
+    r = pud.simulate_op("zero", [a], AMAP8, controller=ctrl, adaptive=True)
+    assert r.rows_per_channel is None
+    assert ctrl.now_ns == 0.0
+    assert all(ch.busy_until_ns == 0.0 for ch in ctrl.channels)
+
+
+def test_cacheline_scheme_collapses_to_one_queue():
+    """Under cacheline interleaving a region is a cross-channel stripe, so
+    the channel partition degenerates to a single queue by construction."""
+    amap = AddressMap(
+        DramGeometry(channels=8, subarrays_per_bank=16),
+        CACHELINE_INTERLEAVED_SCHEME,
+    )
+    rb = amap.region_bytes
+    pas = np.arange(16, dtype=np.int64) * rb
+    assert (amap.region_channels(pas) == 0).all()
+    gsa = amap.region_subarrays(pas)
+    counts = channel_row_counts(gsa, amap)
+    assert counts[0] == 16 and counts[1:].sum() == 0

@@ -123,3 +123,159 @@ def test_plan_partial_row_padding_rules():
     B = heap.alloc(size)
     plan = pud.plan_rows("zero", [B], SMALL)
     assert plan.tail_bytes == size and plan.in_pud == [False]
+
+
+# ---------------------------------------------------------------------------
+# Channel-parallel model: channels=1 must reproduce the single-channel seed
+# semantics bit for bit, and multi-channel execution stays functionally exact.
+# ---------------------------------------------------------------------------
+
+from repro.core.controller import ControllerConfig, DramController
+from repro.core.dram import BANK_REGION_SCHEME, CACHELINE_INTERLEAVED_SCHEME
+
+_SCHEMES_1CH = {
+    "bank_region": BANK_REGION_SCHEME,
+    "cacheline": CACHELINE_INTERLEAVED_SCHEME,
+}
+
+
+def _seed_serial_t_ns(op, operands, amap, model):
+    """The pre-channel-model pricing: PUD rows as one serial burst."""
+    plan = pud.plan_rows(op, operands, amap)
+    region = amap.region_bytes
+    pud_rows = sum(plan.in_pud)
+    cpu_rows = plan.n_rows - pud_rows
+    cpu_bytes = cpu_rows * region
+    if plan.tail_bytes:
+        cpu_bytes += plan.tail_bytes - region
+    t = pud_rows * model.pud_row_ns(op)
+    if cpu_rows:
+        t += model.cpu_op_overhead_ns + model.cpu_ns(op, cpu_bytes, cpu_rows)
+    elif pud_rows:
+        t += model.cpu_op_overhead_ns
+    return t
+
+
+@pytest.mark.parametrize("scheme_name", sorted(_SCHEMES_1CH))
+@pytest.mark.parametrize("alloc_kind", ["puma", "huge", "malloc"])
+def test_channels1_matches_seed_serial_model(scheme_name, alloc_kind):
+    """At channels=1 the channel-parallel pricing *is* the serial sum —
+    exact float equality, not approx — for mixed PUD/CPU plans too."""
+    amap = AddressMap(
+        DramGeometry(channels=1, subarrays_per_bank=16),
+        _SCHEMES_1CH[scheme_name],
+    )
+    model = pud.PudCostModel()
+    for op in ["zero", "copy", "and"]:
+        mem = PhysicalMemory(amap, seed=3, n_huge_pages=16, occupancy=0.2)
+        n_ops = pud.N_OPERANDS[op]
+        size = 5 * amap.region_bytes + 321
+        if alloc_kind == "puma":
+            al = PumaAllocator(mem)
+            al.pim_preallocate(8)
+            operands = [al.pim_alloc(size)]
+            while len(operands) < n_ops:
+                operands.append(al.pim_alloc_align(size, operands[0]))
+        elif alloc_kind == "huge":
+            operands = [HugePageModel(mem).alloc(size) for _ in range(n_ops)]
+        else:
+            operands = [MallocModel(mem).alloc(size) for _ in range(n_ops)]
+        r = pud.simulate_op(op, operands, amap, model, adaptive=False)
+        assert r.t_ns == _seed_serial_t_ns(op, operands, amap, model), op
+        if r.rows_per_channel is not None:
+            assert len(r.rows_per_channel) == 1
+            plan = pud.plan_rows(op, operands, amap)
+            assert r.rows_per_channel[0] == sum(plan.in_pud)
+
+
+def test_channels1_adaptive_identical_to_seed():
+    """The adaptive decision point is unchanged at channels=1: simulate_op
+    picks PUD iff the serial-seed pricing would."""
+    amap = AddressMap(
+        DramGeometry(channels=1, subarrays_per_bank=16), BANK_REGION_SCHEME
+    )
+    mem = PhysicalMemory(amap, seed=4, n_huge_pages=16)
+    model = pud.PudCostModel()
+    al = PumaAllocator(mem)
+    al.pim_preallocate(8)
+    for size in [64, 4096, amap.region_bytes, 4 * amap.region_bytes]:
+        a = al.pim_alloc(size)
+        r = pud.simulate_op("zero", [a], amap, model, adaptive=True)
+        t_seed = _seed_serial_t_ns("zero", [a], amap, model)
+        t_cpu = model.cpu_op_overhead_ns + model.cpu_ns(
+            "zero", size, max(pud.plan_rows("zero", [a], amap).n_rows, 1)
+        )
+        assert r.t_ns == min(t_seed, t_cpu)
+        al.pim_free(a)
+
+
+@pytest.mark.parametrize("op", ["zero", "copy", "and", "or", "not"])
+def test_execute_matches_numpy_multichannel(op):
+    """Channel-partitioned dispatch order writes the same bytes as the
+    whole-buffer numpy op (channels=4, striped PUMA placement)."""
+    amap = AddressMap(
+        DramGeometry(channels=4, subarrays_per_bank=4), BANK_REGION_SCHEME
+    )
+    size = 3 * amap.region_bytes + 123
+    mem = PhysicalMemory(amap, seed=1, n_huge_pages=16, huge_scatter=1.0)
+    al = PumaAllocator(mem, stripe_channels=True)
+    al.pim_preallocate(16)
+    n_ops = pud.N_OPERANDS[op]
+    operands = [al.pim_alloc(size)]
+    while len(operands) < n_ops:
+        operands.append(al.pim_alloc_align(size, operands[0]))
+
+    phys = np.random.default_rng(0).integers(
+        0, 256, amap.total_bytes, dtype=np.uint8
+    )
+    srcs = [
+        np.random.default_rng(i + 1).integers(0, 256, size, dtype=np.uint8)
+        for i in range(n_ops)
+    ]
+    for a, data in zip(operands, srcs):
+        _write(phys, a, data)
+
+    ctrl = DramController(amap, ControllerConfig())
+    plan = pud.execute_op(op, operands, phys, amap, controller=ctrl)
+    got = _read(phys, operands[-1])
+
+    if op == "zero":
+        want = np.zeros(size, np.uint8)
+    elif op == "copy":
+        want = srcs[0]
+    elif op == "not":
+        want = ~srcs[0]
+    elif op == "and":
+        want = srcs[0] & srcs[1]
+    else:
+        want = srcs[0] | srcs[1]
+    np.testing.assert_array_equal(got, want)
+    assert plan.pud_fraction == 1.0
+    # the execution traffic landed on the controllers, striped
+    rep = ctrl.occupancy_report()
+    assert sum(rep["pud_rows"]) == sum(plan.in_pud)
+    assert rep["pud_row_balance"] >= 0.5   # 4 rows over 4 channels, >=2 active
+
+
+def test_multichannel_striped_faster_than_stacked():
+    """The tentpole effect: striped placement divides the in-DRAM burst
+    time by ~the channel count versus single-channel placement."""
+    amap = AddressMap(
+        DramGeometry(channels=8, subarrays_per_bank=16), BANK_REGION_SCHEME
+    )
+    size = 128 * 1024
+    mem = PhysicalMemory(amap, seed=0, n_huge_pages=64, huge_scatter=1.0)
+    striped_al = PumaAllocator(mem, stripe_channels=True)
+    striped_al.pim_preallocate(32)
+    stacked_al = PumaAllocator(mem, stripe_channels=False)
+    stacked_al.pim_preallocate(32)
+    a = striped_al.pim_alloc(size)
+    b = stacked_al.pim_alloc(size)
+    rs = pud.simulate_op("zero", [a], amap, adaptive=False)
+    rk = pud.simulate_op("zero", [b], amap, adaptive=False)
+    assert rs.pud_fraction == rk.pud_fraction == 1.0
+    # free regions need not exist in every channel; striping still spreads
+    # the rows near-evenly over the channels that do have space
+    assert rs.channel_balance > 0.8
+    assert rk.channel_balance == pytest.approx(1 / 8)
+    assert rk.t_ns / rs.t_ns > 4.0

@@ -245,3 +245,106 @@ def test_ordered_array_total_free_running_count():
     puma.pim_free(a)
     assert puma.free_regions() == n
     assert puma.free_regions() == sum(puma.free_counts().values())
+
+
+# ---------------------------------------------------------------------------
+# Channel view: batch (channel, rank, bank, subarray) decode and the
+# channel-striping allocators, pinned to scalar decode / channels=1 behavior.
+# ---------------------------------------------------------------------------
+
+MULTI_GEO = DramGeometry(channels=8, subarrays_per_bank=2)  # 128 MB, 8 ch
+
+
+@pytest.mark.parametrize("scheme_name", sorted(SCHEMES))
+def test_region_coords_matches_scalar_decode(scheme_name):
+    amap = AddressMap(MULTI_GEO, SCHEMES[scheme_name])
+    rng = np.random.default_rng(11)
+    pas = rng.integers(0, amap.total_bytes, 4096, dtype=np.int64)
+    pas -= pas % amap.region_bytes
+    chan, rank, bank, sa = amap.region_coords(pas)
+    for i in rng.choice(len(pas), 200, replace=False):
+        c = amap.decode(int(pas[i]))
+        assert (chan[i], rank[i], bank[i], sa[i]) == (
+            c.channel, c.rank, c.bank, c.subarray
+        ), (scheme_name, hex(int(pas[i])))
+
+
+@pytest.mark.parametrize("scheme_name", sorted(SCHEMES))
+def test_channel_of_subarray_matches_decode(scheme_name):
+    """gsa % channels is the decoded channel — the no-re-decode shortcut the
+    controllers and the striping allocators rely on."""
+    amap = AddressMap(MULTI_GEO, SCHEMES[scheme_name])
+    rng = np.random.default_rng(12)
+    pas = rng.integers(0, amap.total_bytes, 2048, dtype=np.int64)
+    pas -= pas % amap.region_bytes
+    gsa = amap.region_subarrays(pas)
+    chan, _, _, _ = amap.region_coords(pas)
+    np.testing.assert_array_equal(amap.channel_of_subarray(gsa), chan)
+    # scalar form agrees too
+    assert amap.channel_of_subarray(int(gsa[0])) == int(chan[0])
+
+
+def test_region_channels_matches_region_coords():
+    amap = AddressMap(MULTI_GEO, BANK_REGION_SCHEME)
+    rng = np.random.default_rng(13)
+    pas = rng.integers(0, amap.total_bytes, 2048, dtype=np.int64)
+    pas -= pas % amap.region_bytes
+    chan, _, _, _ = amap.region_coords(pas)
+    np.testing.assert_array_equal(amap.region_channels(pas), chan)
+
+
+def test_cacheline_region_channels_all_zero():
+    """Region bases zero the channel bits under cacheline interleaving: a
+    region is a cross-channel stripe, so the partition is one queue."""
+    amap = AddressMap(MULTI_GEO, CACHELINE_INTERLEAVED_SCHEME)
+    rb = amap.region_bytes
+    pas = np.arange(amap.total_bytes // rb, dtype=np.int64) * rb
+    assert (amap.region_channels(pas) == 0).all()
+    assert (amap.channel_of_subarray(amap.region_subarrays(pas)) == 0).all()
+
+
+@pytest.mark.parametrize("scheme_name", ["bank_region", "cacheline"])
+def test_striping_at_channels1_identical_to_unstriped(scheme_name):
+    """stripe_channels=True at channels=1 is bit-for-bit the plain
+    allocator: same extents, same order, same free-region accounting."""
+    amap = AddressMap(
+        DramGeometry(channels=1, subarrays_per_bank=16),
+        SCHEMES[scheme_name],
+    )
+    rnd = random.Random(21)
+    sizes = [rnd.randrange(1, 4 * amap.region_bytes) for _ in range(12)]
+
+    def run(stripe):
+        mem = PhysicalMemory(amap, seed=8, n_huge_pages=24, occupancy=0.2)
+        al = PumaAllocator(mem, stripe_channels=stripe)
+        al.pim_preallocate(8)
+        out = []
+        allocs = []
+        for i, s in enumerate(sizes):
+            a = al.pim_alloc(s)
+            allocs.append(a)
+            out.append([(e.va_off, e.pa, e.nbytes) for e in a.extents])
+            if i % 3 == 2:
+                al.pim_free(allocs.pop(rnd.randrange(len(allocs))))
+        out.append(al.free_regions())
+        return out
+
+    rnd_state = rnd.getstate()
+    plain = run(False)
+    rnd.setstate(rnd_state)
+    striped = run(True)
+    assert plain == striped
+
+
+def test_striped_alloc_spreads_channels():
+    amap = AddressMap(MULTI_GEO, BANK_REGION_SCHEME)
+    mem = PhysicalMemory(amap, seed=9, n_huge_pages=32, huge_scatter=1.0)
+    al = PumaAllocator(mem, stripe_channels=True)
+    al.pim_preallocate(32)
+    a = al.pim_alloc(16 * amap.region_bytes)
+    pas = np.array([e.pa for e in a.extents], dtype=np.int64)
+    used = set(amap.region_channels(pas).tolist())
+    assert len(used) >= 4   # regions landed on many channels, not one
+    rep = al.channel_report()
+    assert rep["channels"] == 8
+    assert rep["used_balance"] > 0.4
