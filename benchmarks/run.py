@@ -11,6 +11,8 @@ aggregator that folds every persisted ``BENCH_*.json`` into one summary.
                       scalar algorithms (persists BENCH_translate.json)
   * channel_bench   — multi-channel PUD scaling + controller contention
                       (persists BENCH_channels.json)
+  * chaos_bench     — degraded-mode metrics under the fixed-seed fault
+                      plan (persists BENCH_faults.json)
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--smoke`` shrinks the
 persisted microbenchmarks for CI; ``--only translate`` runs just one
@@ -90,6 +92,7 @@ def main() -> None:
         from benchmarks import (
             alloc_fraction,
             channel_bench,
+            chaos_bench,
             kernel_bench,
             kv_pool_bench,
             microbench,
@@ -111,6 +114,7 @@ def main() -> None:
             "roofline": lambda: roofline_report.run(emit),
             "translate": lambda: translate_bench.run(emit, smoke=args.smoke),
             "channels": lambda: channel_bench.run(emit, smoke=args.smoke),
+            "chaos": lambda: chaos_bench.run(emit, smoke=args.smoke),
         }
         selected = {
             name: fn

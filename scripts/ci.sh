@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Lightweight CI: tier-1 test suite + the persisted microbenchmarks in
 # smoke mode (BENCH_translate.json and BENCH_channels.json for the perf
-# trajectory), each gated on its speedup floors.
+# trajectory), each gated on its speedup floors, plus the fixed-seed
+# chaos gate (fault-injection suite + BENCH_faults.json assertions).
 #
 #   bash scripts/ci.sh
 set -euo pipefail
@@ -45,6 +46,45 @@ for name, want in [("scaling/256k/ch8", 4.0), ("contention/ch8", 4.0)]:
     if got < want:
         fails.append(name)
     print(f"  {status}: {name} {got:.2f}x (need >= {want}x)")
+raise SystemExit(1 if fails else 0)
+EOF
+
+echo "== chaos suite (fixed-seed fault gate) =="
+python -m pytest -m chaos -q
+
+echo "== chaos benchmark (smoke) =="
+PYTHONPATH="src:." python benchmarks/chaos_bench.py --smoke
+
+echo "== BENCH_faults.json =="
+python - <<'EOF'
+import json
+rec = json.load(open("BENCH_faults.json"))
+fails = []
+def gate(name, cond, detail):
+    print(f"  {'ok' if cond else 'FAIL'}: {name} ({detail})")
+    if not cond:
+        fails.append(name)
+
+f, s = rec["alloc/faulty"], rec["serve/faulty"]
+# the fixed seed must reproduce the faulty section bit-for-bit
+gate("determinism", rec["determinism"]["identical"] is True, "replay identical")
+# the fallback chain absorbs every fault: nothing is silently dropped
+gate("alloc absorbed", f["injected"]["alloc_misses"] > 0 and f["retries"] > 0,
+     f"{f['injected']['alloc_misses']} misses, {f['retries']} retries")
+gate("alloc degraded", 0.0 < f["fallback_fraction"] < 1.0,
+     f"fallback_fraction={f['fallback_fraction']:.3f}")
+gate("quarantine", f["quarantined_regions"] > 0,
+     f"{f['quarantined_regions']} regions quarantined")
+# RowClone faults fire at the documented 1e-3 rate and are priced, not free
+for op in ("copy", "and"):
+    p = rec[f"pud/{op}/degraded"]
+    gate(f"pud {op} faults", p["faulted_rows"] > 0 and p["speedup"] < 1.0,
+         f"{p['faulted_rows']} faulted rows, degradation {p['speedup']:.3f}x")
+# serving ledger: done + rejected + cancelled == submitted (zero drops)
+gate("serve ledger", s["done"] + s["rejected"] + s["cancelled"]
+     == s["submitted"], f"{s['done']}/{s['submitted']} done")
+gate("serve recovery", s["done"] > 0 and s["injected_misses"] > 0,
+     f"{s['injected_misses']} injected misses, {s['preemptions']} preemptions")
 raise SystemExit(1 if fails else 0)
 EOF
 echo "CI OK"

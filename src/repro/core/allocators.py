@@ -19,11 +19,19 @@ from __future__ import annotations
 import dataclasses
 import random
 from bisect import bisect_right
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.dram import AddressMap
+from repro.robustness.errors import (
+    BasePageExhausted,
+    HugePageExhausted,
+    TranslationError,
+)
+
+if TYPE_CHECKING:  # avoid importing the injector at runtime: decide-only dep
+    from repro.robustness.faults import FaultInjector
 
 PAGE = 4096
 HUGE_PAGE = 2 * 1024 * 1024
@@ -84,19 +92,36 @@ class Allocation:
         self._row_sa_cache: Dict[int, Tuple[object, np.ndarray]] = {}
 
     def pa_of(self, va_off: int) -> int:
-        """Translate an offset inside the allocation to a physical address."""
+        """Translate an offset inside the allocation to a physical address.
+
+        Raises :class:`TranslationError` (a ``ValueError``) on unmapped
+        offsets — including any offset into a zero-size/zero-extent
+        allocation.
+        """
         i = bisect_right(self._va_offs, va_off) - 1
         if i >= 0 and va_off < self._va_ends[i]:
             return self._pas[i] + (va_off - self._va_offs[i])
-        raise ValueError(f"offset {va_off} not mapped (size={self.size})")
+        raise TranslationError(
+            f"offset {va_off} not mapped (size={self.size})",
+            va_off=va_off, size=self.size, allocator=self.allocator,
+        )
 
     def contiguous_run(self, va_off: int, nbytes: int) -> Optional[int]:
-        """PA base if [va_off, va_off+nbytes) is one physically contiguous run."""
+        """PA base if [va_off, va_off+nbytes) is one physically contiguous run.
+
+        An unmapped *start* offset (negative, in a hole, beyond the mapping,
+        or any offset of a zero-extent allocation) raises
+        :class:`TranslationError`; a run whose *end* merely overflows the
+        mapping returns None, like any other non-contiguous request.
+        """
+        i = bisect_right(self._va_offs, va_off) - 1
+        if i < 0 or not self.extents or va_off >= self._va_ends[i]:
+            raise TranslationError(
+                f"offset {va_off} not mapped (size={self.size})",
+                va_off=va_off, size=self.size, allocator=self.allocator,
+            )
         if va_off + nbytes > self._va_ends[-1]:
             return None
-        i = bisect_right(self._va_offs, va_off) - 1
-        if i < 0 or va_off >= self._va_ends[i]:
-            raise ValueError(f"offset {va_off} not mapped (size={self.size})")
         # extents are coalesced, so a contiguous run cannot span two of them
         if va_off + nbytes <= self._va_ends[i]:
             return self._pas[i] + (va_off - self._va_offs[i])
@@ -112,7 +137,10 @@ class Allocation:
             if i < 0 or i >= len(self.extents) or not (
                 self._va_offs[i] <= cur < self._va_ends[i]
             ):
-                raise ValueError(f"offset {cur} not mapped (size={self.size})")
+                raise TranslationError(
+                    f"offset {cur} not mapped (size={self.size})",
+                    va_off=cur, size=self.size, allocator=self.allocator,
+                )
             n = min(end, self._va_ends[i]) - cur
             yield self._pas[i] + (cur - self._va_offs[i]), n
             cur += n
@@ -138,9 +166,13 @@ class PhysicalMemory:
         n_huge_pages: int = 512,
         huge_scatter: float = 0.15,
         seed: int = 0,
+        injector: Optional["FaultInjector"] = None,
     ):
         self.amap = amap
         self.rng = random.Random(seed)
+        #: fault injector consulted on every huge-page grab (transient
+        #: exhaustion); None = never inject.
+        self.injector = injector
         total = amap.total_bytes
         self.n_huge = n_huge_pages
         huge_bytes = n_huge_pages * HUGE_PAGE
@@ -173,7 +205,10 @@ class PhysicalMemory:
     # -- base 4 KB pages ----------------------------------------------------
     def take_pages(self, n: int) -> List[int]:
         if n > self._free_budget:
-            raise MemoryError(f"out of base pages ({n} wanted)")
+            raise BasePageExhausted(
+                f"out of base pages ({n} wanted)",
+                wanted=n, free=self._free_budget,
+            )
         out: List[int] = []
         while len(out) < n:
             p = self.rng.randrange(self._base_lo, self._base_hi)
@@ -192,7 +227,17 @@ class PhysicalMemory:
     # -- 2 MB huge pages ----------------------------------------------------
     def take_huge(self, n: int) -> List[int]:
         if n > len(self.free_huge):
-            raise MemoryError(f"out of huge pages ({n} wanted)")
+            raise HugePageExhausted(
+                f"out of huge pages ({n} wanted)",
+                wanted=n, free=len(self.free_huge),
+            )
+        if n and self.injector is not None and self.injector.huge_denied():
+            # transient denial (reservation contention): the pool is not
+            # actually drained — retry-with-backoff may succeed.
+            raise HugePageExhausted(
+                f"huge page grab denied ({n} wanted)", injected=True,
+                wanted=n, free=len(self.free_huge),
+            )
         out, self.free_huge = self.free_huge[:n], self.free_huge[n:]
         return out
 

@@ -40,7 +40,12 @@ import bisect
 import dataclasses
 import heapq
 import random
-from typing import Dict, List, Optional, Sequence
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence
+
+from repro.robustness.errors import DoubleFree
+
+if TYPE_CHECKING:
+    from repro.robustness.faults import FaultInjector
 
 __all__ = ["TileHandle", "PoolStats", "TilePool"]
 
@@ -92,6 +97,7 @@ class PoolStats:
     align_hits: int = 0
     align_misses: int = 0
     failed: int = 0
+    injected_misses: int = 0   # transient misses forced by the fault injector
 
 
 class TilePool:
@@ -106,6 +112,7 @@ class TilePool:
         policy: str = "puma",
         seed: int = 0,
         n_channels: int = 1,
+        injector: Optional["FaultInjector"] = None,
     ):
         assert policy in self.POLICIES, policy
         assert n_channels >= 1 and n_arenas % n_channels == 0, (
@@ -136,6 +143,16 @@ class TilePool:
         self._handles: Dict[int, TileHandle] = {}
         self._next_hid = 1
         self.stats = PoolStats()
+        #: fault injector consulted on alloc/extend (transient device-pool
+        #: misses — what drives the serving engine's preemption path).
+        self.injector = injector
+
+    def _injected_miss(self) -> bool:
+        if self.injector is not None and self.injector.alloc_missed():
+            self.stats.failed += 1
+            self.stats.injected_misses += 1
+            return True
+        return False
 
     # -- bookkeeping ---------------------------------------------------------
     @property
@@ -216,6 +233,8 @@ class TilePool:
 
     # -- PUMA API ------------------------------------------------------------
     def alloc(self, n_tiles: int) -> Optional[TileHandle]:
+        if self._injected_miss():
+            return None
         if n_tiles > self.free_tiles():
             self.stats.failed += 1
             return None
@@ -282,6 +301,8 @@ class TilePool:
         if hint.hid not in self._handles:
             self.stats.failed += 1
             return None
+        if self._injected_miss():
+            return None
         if n_tiles > self.free_tiles():
             self.stats.failed += 1
             return None
@@ -329,6 +350,8 @@ class TilePool:
         the handle's last tile, then same arena, then worst-fit."""
         if handle.hid not in self._handles:
             return False
+        if self._injected_miss():
+            return False
         for _ in range(n_more):
             placed = None
             if handle.tiles:
@@ -373,7 +396,7 @@ class TilePool:
 
     def free(self, handle: TileHandle) -> None:
         if handle.hid not in self._handles:
-            raise KeyError(f"handle {handle.hid} is not live")
+            raise DoubleFree(f"handle {handle.hid} is not live", hid=handle.hid)
         del self._handles[handle.hid]
         for t in handle.tiles:
             self._give_back(t)

@@ -41,11 +41,14 @@ cost model, the benchmarks, and the serving simulations.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.dram import AddressMap
+
+if TYPE_CHECKING:
+    from repro.robustness.faults import FaultInjector
 
 __all__ = [
     "ControllerConfig",
@@ -76,6 +79,8 @@ class ChannelStats:
     row_misses: int = 0
     mode_switches: int = 0
     busy_ns: float = 0.0
+    injected_stalls: int = 0       # fault-injected controller stalls
+    injected_stall_ns: float = 0.0
 
 
 class ChannelController:
@@ -91,17 +96,34 @@ class ChannelController:
     SB = "SB"
     PIM = "PIM"
 
-    def __init__(self, channel_id: int, cfg: Optional[ControllerConfig] = None):
+    def __init__(
+        self,
+        channel_id: int,
+        cfg: Optional[ControllerConfig] = None,
+        injector: Optional["FaultInjector"] = None,
+    ):
         self.channel_id = channel_id
         self.cfg = cfg or ControllerConfig()
         self.busy_until_ns = 0.0
         self.mode = self.SB
         self._open_rows: Dict[int, int] = {}   # bank -> open row index
         self.stats = ChannelStats()
+        #: fault injector: each dispatched burst may hit an injected stall
+        #: (refresh storm / thermal throttle); None = never.
+        self.injector = injector
 
     # -- internals ----------------------------------------------------------
     def _begin(self, now_ns: float) -> float:
         return max(now_ns, self.busy_until_ns)
+
+    def _injected_stall(self, t: float) -> float:
+        if self.injector is not None:
+            stall = self.injector.stall_ns()
+            if stall:
+                self.stats.injected_stalls += 1
+                self.stats.injected_stall_ns += stall
+                t += stall
+        return t
 
     def _switch_mode(self, mode: str, t: float) -> float:
         if self.mode != mode:
@@ -125,6 +147,7 @@ class ChannelController:
             return start
         t = self._switch_mode(self.PIM, start)
         t += n_rows * row_ns
+        t = self._injected_stall(t)
         self.stats.pud_ops += 1
         self.stats.pud_rows += n_rows
         # PUD ops open/close rows themselves; the row buffer is left closed.
@@ -170,6 +193,7 @@ class ChannelController:
                 hits += n - 1
                 self._open_rows[bank] = row
         t += hits * self.cfg.row_hit_ns + misses * self.cfg.row_miss_ns
+        t = self._injected_stall(t)
         self.stats.mem_accesses += len(bank_rows)
         self.stats.row_hits += hits
         self.stats.row_misses += misses
@@ -217,11 +241,13 @@ class DramController:
         self,
         amap: AddressMap,
         cfg: Optional[ControllerConfig] = None,
+        injector: Optional["FaultInjector"] = None,
     ):
         self.amap = amap
         self.cfg = cfg or ControllerConfig()
         self.channels = [
-            ChannelController(c, self.cfg) for c in range(amap.geo.channels)
+            ChannelController(c, self.cfg, injector)
+            for c in range(amap.geo.channels)
         ]
         self.now_ns = 0.0   # dispatch frontier (advances with completions)
 
@@ -310,4 +336,8 @@ class DramController:
             "pud_rows": rows.astype(int).tolist(),
             "pud_row_balance": float(rows.mean() / mx) if mx > 0 else 1.0,
             "mode_switches": [ch.stats.mode_switches for ch in self.channels],
+            "injected_stalls": [ch.stats.injected_stalls for ch in self.channels],
+            "injected_stall_ns": [
+                ch.stats.injected_stall_ns for ch in self.channels
+            ],
         }

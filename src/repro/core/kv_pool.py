@@ -20,13 +20,16 @@ placement translates directly into fewer descriptors.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.arena import TileHandle, TilePool
+
+if TYPE_CHECKING:
+    from repro.robustness.faults import FaultInjector
 
 __all__ = ["KVPoolConfig", "PagedKVPool"]
 
@@ -62,11 +65,11 @@ class KVPoolConfig:
 class PagedKVPool:
     """Host bookkeeping + device buffers for paged KV serving."""
 
-    def __init__(self, cfg: KVPoolConfig):
+    def __init__(self, cfg: KVPoolConfig, injector: Optional["FaultInjector"] = None):
         self.cfg = cfg
         self.pool = TilePool(
             cfg.n_arenas, cfg.blocks_per_arena, cfg.policy,
-            n_channels=cfg.n_channels,
+            n_channels=cfg.n_channels, injector=injector,
         )
         dt = jnp.dtype(cfg.dtype)
         shape = (cfg.n_layers, cfg.num_blocks, cfg.block_size, cfg.kv_heads, cfg.head_dim)
@@ -75,6 +78,17 @@ class PagedKVPool:
         # seq slot -> (k_handle, token_count)
         self._seqs: Dict[int, Tuple[TileHandle, int]] = {}
         self._free_slots = list(range(cfg.max_seqs))
+
+    # -- capacity reasoning (admission control) -------------------------------
+    def blocks_for(self, n_tokens: int) -> int:
+        """KV blocks needed to hold ``n_tokens`` tokens."""
+        return -(-n_tokens // self.cfg.block_size)
+
+    @property
+    def capacity_blocks(self) -> int:
+        """Hard per-sequence block ceiling: a request needing more than this
+        can *never* be admitted, regardless of pool state."""
+        return min(self.cfg.num_blocks, self.cfg.max_blocks_per_seq)
 
     # -- request lifecycle ----------------------------------------------------
     def admit(self, n_prompt_tokens: int) -> Optional[int]:

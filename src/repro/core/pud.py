@@ -66,13 +66,16 @@ schemes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.allocators import Allocation
 from repro.core.controller import DramController, channel_row_counts
 from repro.core.dram import AddressMap
+
+if TYPE_CHECKING:
+    from repro.robustness.faults import FaultInjector
 
 __all__ = [
     "OpKind",
@@ -133,6 +136,9 @@ class RowPlan:
     #: CPU rows).  The owning channel is ``subarrays[r] % channels`` — what
     #: the channel-partitioned executor and the controllers dispatch on.
     subarrays: Optional[np.ndarray] = None
+    #: rows that started in DRAM but faulted mid-flight (injected RowClone
+    #: failures) and were gracefully re-executed on the CPU.
+    faulted_rows: int = 0
 
     @property
     def pud_fraction(self) -> float:
@@ -194,7 +200,10 @@ def row_subarray_table(alloc: Allocation, amap: AddressMap) -> np.ndarray:
 
 
 def plan_rows(
-    op: OpKind, operands: Sequence[Allocation], amap: AddressMap
+    op: OpKind,
+    operands: Sequence[Allocation],
+    amap: AddressMap,
+    injector: Optional["FaultInjector"] = None,
 ) -> RowPlan:
     """Decide, row by row, whether the op can execute in DRAM.
 
@@ -219,6 +228,10 @@ def plan_rows(
     ok = tables[0] != -1
     for t in tables[1:]:
         ok = ok & (t == tables[0])
+    if injector is not None and injector.blacklist:
+        # permanently failed subarrays never execute in DRAM: their rows are
+        # planned onto the CPU up front (the driver knows the blacklist).
+        ok = ok & ~injector.blacklisted_mask(tables[0])
     in_pud = ok.tolist()
     tail_bytes = 0 if (not tail or in_pud[-1]) else tail
     # on PUD rows every operand shares operand 0's subarray by construction
@@ -239,6 +252,9 @@ class SimResult:
     #: PUD rows dispatched per channel (len = geometry channel count);
     #: None when the op took the pure-CPU path.
     rows_per_channel: Optional[List[int]] = None
+    #: rows whose in-DRAM execution faulted (injected) and were re-run on
+    #: the CPU — their wasted AAP time *and* the CPU retry are in ``t_ns``.
+    faulted_rows: int = 0
 
     @property
     def speedup_vs_cpu(self) -> float:
@@ -261,6 +277,7 @@ def simulate_op(
     model: PudCostModel = PudCostModel(),
     adaptive: bool = True,
     controller: Optional[DramController] = None,
+    injector: Optional["FaultInjector"] = None,
 ) -> SimResult:
     """Price one op.  ``adaptive`` (beyond-paper refinement): the PUD driver
     knows both cost models and only offloads when DRAM execution is cheaper —
@@ -274,8 +291,14 @@ def simulate_op(
     switches then show up in ``t_ns``, and the dispatch advances the
     controller state (unless the adaptive driver picks the CPU, in which
     case the queues are left untouched).
+
+    With an ``injector``, rows in blacklisted subarrays are planned onto the
+    CPU up front, and the surviving PUD rows may fault mid-flight at the
+    injected RowClone error rate: a faulted row's AAP time is wasted and the
+    row is re-executed on the CPU — the graceful-degradation pricing the
+    chaos benchmark measures.
     """
-    plan = plan_rows(op, operands, amap)
+    plan = plan_rows(op, operands, amap, injector=injector)
     region = amap.region_bytes
     size = min(a.size for a in operands)
 
@@ -307,12 +330,26 @@ def simulate_op(
         t += model.cpu_op_overhead_ns  # syscall into the PUD driver
 
     t_cpu = model.cpu_op_overhead_ns + model.cpu_ns(op, size, max(plan.n_rows, 1))
+    n_faulted = 0
     if adaptive and t > t_cpu:
         t = t_cpu
         rows_per_channel = None  # driver picked the CPU: nothing dispatched
-    elif pud_rows and controller is not None:
-        controller.dispatch_pud(plan.pud_subarrays(), row_ns)
-    return SimResult(op, size, plan.pud_fraction, t, t_cpu, rows_per_channel)
+    elif pud_rows:
+        if injector is not None:
+            # mid-flight RowClone faults: the AAP time above is already
+            # spent; each faulted row is gracefully retried on the CPU.
+            faults = injector.rowclone_faults(plan.pud_subarrays().tolist())
+            n_faulted = int(faults.sum())
+            if n_faulted:
+                plan.faulted_rows = n_faulted
+                if not cpu_rows:  # first CPU entry for this op: pay setup
+                    t += model.cpu_op_overhead_ns
+                t += model.cpu_ns(op, n_faulted * region, n_faulted)
+        if controller is not None:
+            controller.dispatch_pud(plan.pud_subarrays(), row_ns)
+    return SimResult(
+        op, size, plan.pud_fraction, t, t_cpu, rows_per_channel, n_faulted
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -343,6 +380,7 @@ def execute_op(
     amap: AddressMap,
     controller: Optional[DramController] = None,
     model: Optional[PudCostModel] = None,
+    injector: Optional["FaultInjector"] = None,
 ) -> RowPlan:
     """Execute ``op`` with dst = operands[-1], srcs = operands[:-1].
 
@@ -358,8 +396,13 @@ def execute_op(
     row-index order the single-channel model used).  CPU rows follow.  With
     a ``controller``, the same partition is queued on the per-channel
     frontiers so execution traffic shows up in the occupancy report.
+
+    With an ``injector``, blacklisted subarrays never enter DRAM dispatch
+    and PUD rows may fault mid-flight (RowClone copy failure): a faulted
+    row is transparently re-executed on the CPU path — same bytes, graceful
+    degradation — and counted in the returned plan's ``faulted_rows``.
     """
-    plan = plan_rows(op, operands, amap)
+    plan = plan_rows(op, operands, amap, injector=injector)
     region = amap.region_bytes
     size = min(a.size for a in operands)
     dst, srcs = operands[-1], list(operands[:-1])
@@ -392,7 +435,19 @@ def execute_op(
 
     if plan.n_rows:
         rows = np.arange(plan.n_rows)
-        in_pud = np.asarray(plan.in_pud, dtype=bool)
+        planned = np.asarray(plan.in_pud, dtype=bool)
+        in_pud = planned
+        if injector is not None and planned.any():
+            # mid-flight RowClone faults: the row leaves the DRAM burst and
+            # re-executes on the CPU (identical bytes — graceful degradation)
+            faults = injector.rowclone_faults(
+                plan.subarrays[planned].tolist()
+            )
+            if faults.any():
+                idx = rows[planned][faults]
+                in_pud = planned.copy()
+                in_pud[idx] = False
+                plan.faulted_rows = int(faults.sum())
         chans = np.where(
             in_pud, amap.channel_of_subarray(plan.subarrays), -1
         )
@@ -402,7 +457,9 @@ def execute_op(
                 do_row(r)
         for r in rows[chans == -1].tolist():
             do_row(r)
-        if controller is not None and in_pud.any():
+        if controller is not None and planned.any():
+            # faulted rows still spent their AAP time in DRAM: charge the
+            # whole planned burst, not just the rows that completed there.
             controller.dispatch_pud(
                 plan.pud_subarrays(), (model or PudCostModel()).pud_row_ns(op)
             )

@@ -25,14 +25,31 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Optional
+from typing import TYPE_CHECKING, Dict, List, Optional
 
 import numpy as np
 
-from repro.core.allocators import HUGE_PAGE, Allocation, Extent, PhysicalMemory
+from repro.core.allocators import (
+    HUGE_PAGE,
+    PAGE,
+    Allocation,
+    Extent,
+    HugePageModel,
+    PhysicalMemory,
+    PosixMemalignModel,
+)
 from repro.core.dram import AddressMap
+from repro.robustness.errors import (
+    BasePageExhausted,
+    DoubleFree,
+    HugePageExhausted,
+    PoolExhausted,
+)
 
-__all__ = ["PumaStats", "PumaAllocator"]
+if TYPE_CHECKING:
+    from repro.robustness.faults import FaultInjector
+
+__all__ = ["PumaStats", "PumaAllocator", "FallbackStats", "RobustAllocator"]
 
 
 @dataclasses.dataclass
@@ -43,6 +60,9 @@ class PumaStats:
     align_hits: int = 0      # regions placed in the hinted subarray
     align_misses: int = 0    # worst-fit fallbacks during pim_alloc_align
     failed_allocs: int = 0
+    injected_misses: int = 0      # transient misses forced by the injector
+    quarantined_regions: int = 0  # regions pulled for blacklisted subarrays
+    remapped_regions: int = 0     # live regions migrated off dead subarrays
 
 
 class _OrderedArray:
@@ -132,6 +152,16 @@ class _OrderedArray:
             heapq.heappop(heap)  # stale entry
         return None
 
+    def drain(self, subarray: int) -> List[int]:
+        """Remove and return every free region of ``subarray`` (blacklist
+        quarantine).  Heap entries invalidate lazily via a 0-count push."""
+        lst = self.free.pop(subarray, [])
+        if lst:
+            self._total -= len(lst)
+            self._total_ch[subarray % self.channels] -= len(lst)
+            self._push(subarray)
+        return lst
+
     def total_free(self, channel: Optional[int] = None) -> int:
         return self._total if channel is None else self._total_ch[channel]
 
@@ -151,6 +181,7 @@ class PumaAllocator:
         amap: Optional[AddressMap] = None,
         *,
         stripe_channels: bool = False,
+        injector: Optional["FaultInjector"] = None,
     ):
         self.mem = mem
         self.amap = amap or mem.amap
@@ -169,6 +200,16 @@ class PumaAllocator:
         self._regions_of: Dict[int, List[int]] = {}    # va -> region PAs
         self._va_next = 0x7000_0000_0000
         self.stats = PumaStats()
+        #: fault injector (transient alloc misses + permanent-fault
+        #: blacklist source); None = fault-free.
+        self.injector = injector
+        #: subarrays quarantined after permanent faults; their regions are
+        #: never handed out again.
+        self._blacklisted: set = set()
+        self._quarantined: List[int] = []   # region PAs pulled from the pool
+        if injector is not None:
+            for sa in sorted(injector.blacklist):
+                self._blacklisted.add(sa)
 
     # -- 1) pre-allocation (paper step (1)) ---------------------------------
     def pim_preallocate(self, n_huge_pages: int) -> int:
@@ -184,10 +225,18 @@ class PumaAllocator:
         rb = self.region_bytes
         per_hp = np.arange(HUGE_PAGE // rb, dtype=np.int64) * rb
         rpas = (np.asarray(hps, dtype=np.int64)[:, None] + per_hp).ravel()
-        self._ordered.add_regions(self.amap.region_subarrays(rpas), rpas)
-        added = len(rpas)
-        self.stats.preallocated_regions += added
-        return added
+        sas = self.amap.region_subarrays(rpas)
+        self.stats.preallocated_regions += len(rpas)
+        if self._blacklisted:
+            # regions landing in dead subarrays go straight to quarantine
+            bl = np.fromiter(self._blacklisted, dtype=np.int64)
+            bad = np.isin(sas, bl)
+            if bad.any():
+                self._quarantined.extend(rpas[bad].tolist())
+                self.stats.quarantined_regions += int(bad.sum())
+                rpas, sas = rpas[~bad], sas[~bad]
+        self._ordered.add_regions(sas, rpas)
+        return len(rpas)
 
     # -- helpers -------------------------------------------------------------
     def _nregions(self, size: int) -> int:
@@ -219,16 +268,39 @@ class PumaAllocator:
         if not region_pas:
             return
         pas = np.asarray(region_pas, dtype=np.int64)
-        self._ordered.add_regions(self.amap.region_subarrays(pas), pas)
+        # regions leave the in-use set either way (freed or quarantined)
         if self.n_channels > 1:
             self._used_per_channel -= np.bincount(
                 self.amap.region_channels(pas), minlength=self.n_channels
             )
         else:
             self._used_per_channel[0] -= len(pas)
+        sas = self.amap.region_subarrays(pas)
+        if self._blacklisted:
+            # freed regions of dead subarrays are quarantined, not recycled
+            bl = np.fromiter(self._blacklisted, dtype=np.int64)
+            bad = np.isin(sas, bl)
+            if bad.any():
+                self._quarantined.extend(pas[bad].tolist())
+                self.stats.quarantined_regions += int(bad.sum())
+                pas, sas = pas[~bad], sas[~bad]
+                if pas.size == 0:
+                    return
+        self._ordered.add_regions(sas, pas)
+
+    def _injected_miss(self) -> bool:
+        """Transient fragmented-arena miss forced by the fault injector."""
+        if self.injector is not None and self.injector.alloc_missed():
+            self.stats.failed_allocs += 1
+            self.stats.injected_misses += 1
+            return True
+        return False
 
     # -- 2) first allocation: worst-fit (paper step (2)) ----------------------
     def pim_alloc(self, size: int) -> Optional[Allocation]:
+        self.sync_blacklist()
+        if self._injected_miss():
+            return None
         need = self._nregions(size)
         if need > self._ordered.total_free():
             self.stats.failed_allocs += 1
@@ -281,6 +353,9 @@ class PumaAllocator:
         if hint.va not in self._allocations:
             self.stats.failed_allocs += 1
             return None
+        self.sync_blacklist()
+        if self._injected_miss():
+            return None
         hint_regions = self._regions_of[hint.va]
         need = self._nregions(size)
         if need > self._ordered.total_free():
@@ -315,12 +390,88 @@ class PumaAllocator:
     # -- beyond-paper: recycling ----------------------------------------------
     def pim_free(self, alloc: Allocation) -> None:
         if alloc.va not in self._allocations:
-            raise KeyError(f"{alloc.va:#x} is not a live PUMA allocation")
+            raise DoubleFree(
+                f"{alloc.va:#x} is not a live PUMA allocation", va=alloc.va
+            )
         region_pas = self._regions_of.pop(alloc.va)
         del self._allocations[alloc.va]
         self._release(region_pas)
         self.stats.live_allocations -= 1
         self.stats.regions_in_use -= len(region_pas)
+
+    # -- robustness: permanent-fault blacklisting + row remap -----------------
+    def sync_blacklist(self) -> int:
+        """Pull newly blacklisted subarrays from the fault injector (permanent
+        RowClone failures observed by the PUD executor) and quarantine/remap
+        them.  Returns the number of subarrays newly blacklisted."""
+        if self.injector is None:
+            return 0
+        fresh = self.injector.new_permanent_faults(self._blacklisted)
+        for sa in sorted(fresh):
+            self.blacklist_subarray(sa)
+        return len(fresh)
+
+    def blacklist_subarray(self, sa: int, phys: Optional[np.ndarray] = None) -> int:
+        """Handle a permanent subarray failure: quarantine its free regions
+        and *remap* every live allocation's regions out of it (the kernel's
+        row-remap path; the migration itself is a RowClone copy per row —
+        pass ``phys`` to actually move the bytes on the modeled memory).
+
+        Returns the number of live regions remapped.  Raises
+        :class:`PoolExhausted` when the pool has no spare region to remap
+        into (the row's data would be lost on real hardware; callers should
+        treat the allocation as failed).
+        """
+        self._blacklisted.add(sa)
+        drained = self._ordered.drain(sa)
+        if drained:
+            self._quarantined.extend(drained)
+            self.stats.quarantined_regions += len(drained)
+        remapped = 0
+        rb = self.region_bytes
+        for va, regions in self._regions_of.items():
+            if not regions:
+                continue
+            sas = self.amap.region_subarrays(np.asarray(regions, np.int64))
+            hits = np.flatnonzero(sas == sa)
+            if hits.size == 0:
+                continue
+            for k in hits.tolist():
+                tgt = self._ordered.worst_fit_subarray()
+                new_pa = self._ordered.take_from(tgt) if tgt is not None else None
+                if new_pa is None:
+                    raise PoolExhausted(
+                        "no spare region to remap faulty subarray into",
+                        subarray=sa, va=va,
+                    )
+                old_pa = regions[k]
+                if phys is not None:
+                    phys[new_pa:new_pa + rb] = phys[old_pa:old_pa + rb]
+                self._quarantined.append(old_pa)
+                self.stats.quarantined_regions += 1
+                regions[k] = new_pa
+                remapped += 1
+                if self.n_channels > 1:
+                    self._used_per_channel[
+                        int(self.amap.channel_of_subarray(sa))] -= 1
+                    self._used_per_channel[
+                        int(self.amap.channel_of_subarray(int(tgt)))] += 1
+            # rebuild the allocation's extent list in place (same VA, same
+            # hashmap identity — aligned-allocation hints keep working)
+            alloc = self._allocations[va]
+            alloc.extents = [
+                Extent(i * rb, pa, rb) for i, pa in enumerate(regions)
+            ]
+            alloc.__post_init__()
+        self.stats.remapped_regions += remapped
+        return remapped
+
+    @property
+    def blacklisted_subarrays(self) -> List[int]:
+        return sorted(self._blacklisted)
+
+    def quarantined_regions(self) -> int:
+        return len(self._quarantined)
 
     # introspection used by tests / benchmarks
     def lookup(self, va: int) -> Optional[Allocation]:
@@ -352,5 +503,167 @@ class PumaAllocator:
     def alloc(self, size: int) -> Allocation:
         a = self.pim_alloc(size)
         if a is None:
-            raise MemoryError("PUMA pool exhausted")
+            raise PoolExhausted(
+                "PUMA pool exhausted", wanted=self._nregions(size),
+                free=self._ordered.total_free(),
+            )
         return a
+
+
+# ---------------------------------------------------------------------------
+# Recovery layer: bounded retry-with-backoff fallback chain (ISSUE 7).
+# Mirrors the kernel allocator's fallback order: PUD pool (PUMA) -> fresh
+# huge pages -> scattered base pages.  Each tier degrades placement quality
+# (PUD-executable -> row-aligned-but-opportunistic -> 0% PUD) but never
+# fails the caller until base pages are gone too.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FallbackStats:
+    puma: int = 0            # allocations served by the PUD pool
+    huge: int = 0            # ... by fresh huge pages (degraded tier 2)
+    base: int = 0            # ... by scattered base pages (degraded tier 3)
+    retries: int = 0         # failed attempts that were retried
+    refills: int = 0         # pim_preallocate refills between retries
+    failures: int = 0        # requests that exhausted every tier
+    backoff_ns: float = 0.0  # simulated backoff time spent waiting
+
+    @property
+    def served(self) -> int:
+        return self.puma + self.huge + self.base
+
+    def fallback_fraction(self) -> float:
+        """Fraction of served allocations that fell off the PUMA tier."""
+        return (self.huge + self.base) / self.served if self.served else 0.0
+
+
+class RobustAllocator:
+    """Hardened allocation front-end over a :class:`PumaAllocator`.
+
+    ``alloc`` walks the chain PUMA -> huge-page -> base-page with bounded
+    per-tier retries and exponential (simulated) backoff:
+
+    1. **PUMA tier** — ``pim_alloc``/``pim_alloc_align``; a miss triggers a
+       pool refill (``pim_preallocate``) when the pool is genuinely short,
+       then a bounded retry (which also absorbs injector-transient misses).
+    2. **huge-page tier** — per-request fresh huge pages (row-aligned but
+       only opportunistically co-located, the paper's strongest baseline);
+       injector denials are retried up to ``max_retries``.
+    3. **base-page tier** — scattered 4 KB pages (0 % PUD-executable).
+
+    Raises :class:`PoolExhausted` only when every tier is dry.  ``free``
+    routes by the allocation's ``allocator`` tag so callers can churn
+    without tracking which tier served them.
+    """
+
+    name = "puma-robust"
+
+    def __init__(
+        self,
+        puma: PumaAllocator,
+        *,
+        max_retries: int = 3,
+        backoff_ns: float = 200.0,
+        refill_huge_pages: int = 8,
+    ):
+        self.puma = puma
+        self.mem = puma.mem
+        self.max_retries = max_retries
+        self.backoff_ns = backoff_ns
+        self.refill_huge_pages = refill_huge_pages
+        self._huge = HugePageModel(puma.mem, mode="mmap")
+        self._base = PosixMemalignModel(puma.mem)
+        self._tier_of: Dict[int, str] = {}   # va -> serving tier
+        self.stats = FallbackStats()
+
+    def _backoff(self, attempt: int) -> None:
+        self.stats.retries += 1
+        self.stats.backoff_ns += self.backoff_ns * (2 ** attempt)
+
+    # -- tier 1: PUMA ---------------------------------------------------------
+    def _try_puma(self, size: int, hint: Optional[Allocation]) -> Optional[Allocation]:
+        for attempt in range(self.max_retries + 1):
+            if hint is not None:
+                a = self.puma.pim_alloc_align(size, hint)
+                if a is None and self.puma.lookup(hint.va) is None:
+                    # dead hint: aligned allocation can never succeed (paper);
+                    # fall through to plain worst-fit instead of retrying.
+                    hint = None
+                    a = self.puma.pim_alloc(size)
+            else:
+                a = self.puma.pim_alloc(size)
+            if a is not None:
+                return a
+            if attempt == self.max_retries:
+                break
+            self._backoff(attempt)
+            need = self.puma._nregions(size)
+            if need > self.puma.free_regions():
+                # genuinely short: grow the PUD pool like the kernel module
+                try:
+                    self.puma.pim_preallocate(self.refill_huge_pages)
+                    self.stats.refills += 1
+                except HugePageExhausted as e:
+                    if not e.injected:
+                        break   # reservation is truly dry: go to tier 2
+        return None
+
+    # -- tier 2/3: degraded --------------------------------------------------
+    def _try_huge(self, size: int) -> Optional[Allocation]:
+        for attempt in range(self.max_retries + 1):
+            try:
+                return self._huge.alloc(size)
+            except HugePageExhausted as e:
+                if not e.injected:
+                    return None
+                if attempt < self.max_retries:
+                    self._backoff(attempt)
+        return None
+
+    def alloc(self, size: int, hint: Optional[Allocation] = None) -> Allocation:
+        a = self._try_puma(size, hint)
+        if a is not None:
+            self.stats.puma += 1
+            self._tier_of[a.va] = "puma"
+            return a
+        a = self._try_huge(size)
+        if a is not None:
+            self.stats.huge += 1
+            self._tier_of[a.va] = "huge"
+            return a
+        try:
+            a = self._base.alloc(size)
+        except BasePageExhausted:
+            self.stats.failures += 1
+            raise PoolExhausted(
+                "allocation failed in every tier (puma, huge, base)",
+                size=size,
+            )
+        self.stats.base += 1
+        self._tier_of[a.va] = "base"
+        return a
+
+    def free(self, alloc: Allocation) -> None:
+        tier = self._tier_of.pop(alloc.va, None)
+        if tier is None:
+            raise DoubleFree(
+                f"{alloc.va:#x} was not served by this allocator", va=alloc.va
+            )
+        if tier == "puma":
+            self.puma.pim_free(alloc)
+        elif tier == "huge":
+            # mmap-mode huge allocations own whole (coalesced) huge pages
+            self.mem.release_huge(
+                [e.pa + off
+                 for e in alloc.extents
+                 for off in range(0, e.nbytes, HUGE_PAGE)]
+            )
+        else:  # base pages
+            self.mem.release_pages(
+                [e.pa + off
+                 for e in alloc.extents
+                 for off in range(0, e.nbytes, PAGE)]
+            )
+
+    def tier_of(self, alloc: Allocation) -> Optional[str]:
+        return self._tier_of.get(alloc.va)

@@ -1,0 +1,44 @@
+"""Fault injection, typed failures, and invariant auditing (ISSUE 7).
+
+Import structure: :mod:`repro.robustness.errors` and
+:mod:`repro.robustness.faults` are dependency-free (the core layers import
+*them*), while :mod:`repro.robustness.invariants` inspects the core pools
+and therefore imports core.  To keep ``repro.core.* -> repro.robustness.
+errors`` acyclic, ``invariants`` is loaded lazily via ``__getattr__``.
+"""
+from repro.robustness.errors import (  # noqa: F401
+    BasePageExhausted,
+    DeadlineExceeded,
+    DoubleFree,
+    EngineStalled,
+    HugePageExhausted,
+    InvariantViolation,
+    PoolExhausted,
+    PudExecError,
+    PumaAllocError,
+    PumaError,
+    RequestRejected,
+    RowCloneFault,
+    TilePoolExhausted,
+    TranslationError,
+)
+from repro.robustness.faults import FaultInjector, FaultPlan, FaultStats  # noqa: F401
+
+_LAZY = ("InvariantReport", "check_allocator", "check_tile_pool",
+         "check_kv_pool", "check_engine")
+
+__all__ = [
+    "PumaError", "PumaAllocError", "PoolExhausted", "HugePageExhausted",
+    "BasePageExhausted", "TilePoolExhausted", "DoubleFree",
+    "TranslationError", "PudExecError", "RowCloneFault", "RequestRejected",
+    "DeadlineExceeded", "EngineStalled", "InvariantViolation",
+    "FaultPlan", "FaultStats", "FaultInjector", *_LAZY,
+]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        from repro.robustness import invariants
+
+        return getattr(invariants, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

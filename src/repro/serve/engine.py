@@ -4,6 +4,8 @@ Lifecycle per step:
 
   1. **admit** — pull queued requests while pool blocks + seq slots allow;
      PUMA placement (worst-fit first allocation) assigns prompt blocks.
+     Admission scans a bounded *lookahead window* of the queue, so one
+     large head-of-line request cannot starve small requests behind it.
   2. **prefill** — teacher-forced pass with a dense scratch cache, then the
      per-layer K/V pages are scattered into the pool blocks (a bulk
      RowClone-style block write).
@@ -12,19 +14,38 @@ Lifecycle per step:
   4. **bookkeeping** — new-token K/V written to the PUMA-chosen block
      (``extend`` keeps arena locality), finished sequences release blocks.
 
+Hardened (degraded-mode) path — no request is ever silently dropped:
+
+  * ``submit`` rejects *never-admissible* requests (empty prompt, or
+    prompt+max_new exceeding the per-sequence block ceiling) with a typed
+    :class:`~repro.robustness.RequestRejected` — instead of queueing work
+    that can never run.
+  * A request may carry ``deadline_steps``; once ``clock`` passes it the
+    request is cancelled with :class:`~repro.robustness.DeadlineExceeded`
+    and its blocks are released (cooperative cancellation).
+  * When a decode-time block ``extend`` fails (pool pressure or an injected
+    fault), the engine preempts the *youngest* live sequence — the one
+    whose blocks were allocated most recently, i.e. LRU over block
+    allocation time and the cheapest prefill to redo — releasing its blocks
+    and re-queueing it at the queue front.  On re-admission the preempted
+    request *recomputes* its KV from ``prompt + out[:-1]`` (recompute-on-
+    resume), so generation continues bit-exactly.
+  * If the engine sits with an empty batch and a non-empty queue for more
+    than ``stall_patience`` steps, the stuck requests are rejected with a
+    stall report attached — loud failure instead of a silent busy-loop.
+
 Metrics surface the paper's figure of merit: block-table contiguity (the
-"% executable in PUD" analogue) plus throughput counters.  With
-``KVPoolConfig.n_channels > 1`` the pool stripes each request's blocks
-round-robin across memory channels (contiguous per-channel chunks), and
-``metrics()``/``channel_occupancy()`` additionally report the per-channel
-block occupancy and its load balance — the serving-side view of the
-channel-parallel PUD substrate in :mod:`repro.core.controller`.
+"% executable in PUD" analogue) plus throughput and degraded-mode counters
+(rejected / cancelled / preemptions).  With ``KVPoolConfig.n_channels > 1``
+the pool stripes each request's blocks round-robin across memory channels,
+and ``metrics()``/``channel_occupancy()`` additionally report per-channel
+block occupancy and its load balance.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import TYPE_CHECKING, Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,7 +53,11 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.kv_pool import KVPoolConfig, PagedKVPool
+from repro.robustness import DeadlineExceeded, EngineStalled, RequestRejected
 from repro.serve.paged_runner import paged_decode_step
+
+if TYPE_CHECKING:
+    from repro.robustness.faults import FaultInjector
 
 
 @dataclasses.dataclass
@@ -42,6 +67,20 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     slot: Optional[int] = None
+    # robustness / QoS fields
+    deadline_steps: Optional[int] = None   # engine-clock budget from submit
+    status: str = "queued"                 # queued|running|done|rejected|cancelled
+    submit_clock: int = 0
+    admit_clock: int = -1
+    preemptions: int = 0
+    error: Optional[Exception] = None
+
+    def ctx_tokens(self) -> int:
+        """Tokens whose KV must exist before the next decode step — the
+        prompt plus all-but-the-last generated token (the last one is the
+        next decode *input*).  This is what a resume-after-preemption
+        prefill recomputes."""
+        return len(self.prompt) + max(0, len(self.out) - 1)
 
 
 class ServeEngine:
@@ -53,6 +92,9 @@ class ServeEngine:
         *,
         use_kernel: bool = False,   # pallas-interpret is slow on CPU; jnp ref default
         eos_id: Optional[int] = None,
+        injector: Optional["FaultInjector"] = None,
+        admission_lookahead: int = 8,
+        stall_patience: int = 3,
     ):
         cfg = model.cfg
         assert pool_cfg.kv_heads == cfg.n_kv_heads and pool_cfg.head_dim == cfg.hd
@@ -60,23 +102,128 @@ class ServeEngine:
         self.model = model
         self.cfg = cfg
         self.params = params
-        self.pool = PagedKVPool(pool_cfg)
+        self.pool = PagedKVPool(pool_cfg, injector=injector)
         self.use_kernel = use_kernel
         self.eos_id = eos_id
+        self.admission_lookahead = max(1, admission_lookahead)
+        self.stall_patience = max(1, stall_patience)
         self.queue: Deque[Request] = deque()
         self.live: Dict[int, Request] = {}     # slot -> request
         self.done: List[Request] = []
-        self.steps = 0
+        self.rejected: List[Request] = []
+        self.cancelled: List[Request] = []
+        self.steps = 0                          # decode steps (batch advanced)
+        self.clock = 0                          # every step() call, incl. stalls
         self.tokens_decoded = 0
+        self.preemptions = 0
+        self.submitted = 0
+        self._stall_steps = 0
 
     # -- submission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        """Queue a request; raises :class:`RequestRejected` immediately if it
+        can *never* be admitted (so no work is silently parked forever)."""
+        self.submitted += 1
+        req.submit_clock = self.clock
+        total_blocks = self.pool.blocks_for(len(req.prompt) + req.max_new)
+        if not req.prompt:
+            err = RequestRejected("empty prompt", rid=req.rid)
+        elif total_blocks > self.pool.capacity_blocks:
+            err = RequestRejected(
+                "request can never be admitted: prompt+max_new exceeds the "
+                "per-sequence block ceiling",
+                rid=req.rid, blocks_needed=total_blocks,
+                capacity_blocks=self.pool.capacity_blocks,
+            )
+        else:
+            self.queue.append(req)
+            return
+        req.status = "rejected"
+        req.error = err
+        self.rejected.append(req)
+        raise err
+
+    # -- degraded-mode bookkeeping --------------------------------------------
+    def _reject(self, req: Request, err: RequestRejected) -> None:
+        req.status = "rejected"
+        req.error = err
+        self.rejected.append(req)
+
+    def _cancel(self, req: Request, err: Exception) -> None:
+        req.status = "cancelled"
+        req.error = err
+        self.cancelled.append(req)
+
+    def _sweep_deadlines(self) -> None:
+        now = self.clock
+        for i in range(len(self.queue) - 1, -1, -1):
+            req = self.queue[i]
+            if req.deadline_steps is not None and now - req.submit_clock > req.deadline_steps:
+                del self.queue[i]
+                self._cancel(req, DeadlineExceeded(
+                    "deadline expired while queued",
+                    rid=req.rid, deadline_steps=req.deadline_steps,
+                    waited=now - req.submit_clock,
+                ))
+        expired = [
+            s for s, r in self.live.items()
+            if r.deadline_steps is not None and now - r.submit_clock > r.deadline_steps
+        ]
+        for slot in expired:
+            req = self.live.pop(slot)
+            self.pool.release(slot)
+            req.slot = None
+            self._cancel(req, DeadlineExceeded(
+                "deadline expired mid-decode",
+                rid=req.rid, deadline_steps=req.deadline_steps,
+                decoded=len(req.out),
+            ))
+
+    def _pick_victim(self, exclude: int) -> Optional[int]:
+        """Preemption victim: the youngest live sequence (blocks allocated
+        most recently — LRU over allocation time, cheapest to recompute)."""
+        candidates = [s for s in self.live if s != exclude]
+        if not candidates:
+            return None
+        return max(candidates, key=lambda s: (self.live[s].admit_clock, s))
+
+    def _preempt(self, slot: int) -> None:
+        req = self.live.pop(slot)
+        self.pool.release(slot)
+        req.slot = None
+        req.status = "queued"
+        req.preemptions += 1
+        self.preemptions += 1
+        self.queue.appendleft(req)   # resume first: it already holds progress
+
+    def _append_with_recovery(self, slot: int) -> bool:
+        """`append_token` with transient-fault retries and preemption.
+
+        Transient injected misses are retried (fresh fault draw each time);
+        true exhaustion preempts the youngest *other* sequence and retries.
+        Returns False only when the pool genuinely cannot host one more
+        block for this sequence.
+        """
+        for _ in range(3):
+            if self.pool.append_token(slot):
+                return True
+            if self.pool.pool.free_tiles() > 0:
+                continue                      # injected transient miss
+            victim = self._pick_victim(exclude=slot)
+            if victim is None:
+                return False
+            self._preempt(victim)
+        return self.pool.append_token(slot)
 
     # -- prefill --------------------------------------------------------------
-    def _prefill(self, req: Request) -> None:
+    def _prefill(self, req: Request) -> bool:
+        """Teacher-forced KV fill over ``prompt + out[:-1]`` — identical for
+        a fresh request (out empty) and a preempted one resuming
+        (recompute-on-resume).  Returns False if the request had to be
+        rejected (pathological: pool cannot host the sampled token)."""
         cfg = self.cfg
-        toks = jnp.asarray([req.prompt], jnp.int32)
+        ctx = req.prompt + req.out[:-1]
+        toks = jnp.asarray([ctx], jnp.int32)
         S = toks.shape[1]
         pos = jnp.arange(S, dtype=jnp.int32)[None]
         cache = self.model.init_cache(1, S, recent_size=S)
@@ -86,31 +233,67 @@ class ServeEngine:
         k, v = cache["layers"]["recent"]            # (L, 1, S, KV, hd)
         for li in range(cfg.n_layers):
             self.pool.write_prompt_kv(req.slot, li, k[li, 0, :S], v[li, 0, :S])
-        first = int(jnp.argmax(logits[0]))
-        req.out.append(first)
-        # account the sampled token: it becomes the next decode input
-        self.pool.append_token(req.slot)
+        if not req.out:
+            req.out.append(int(jnp.argmax(logits[0])))
+        # account the pending token: it becomes the next decode input
+        if not self._append_with_recovery(req.slot):
+            slot = req.slot
+            self.pool.release(slot)
+            del self.live[slot]
+            req.slot = None
+            self._reject(req, RequestRejected(
+                "KV pool cannot host the sampled token", rid=req.rid,
+            ))
+            return False
+        return True
 
     # -- one engine step ---------------------------------------------------------
     def step(self) -> bool:
         """Admit + decode one token for all live seqs. False when idle."""
-        # 1) admit
-        while self.queue:
-            req = self.queue[0]
-            slot = self.pool.admit(len(req.prompt))
+        self.clock += 1
+        self._sweep_deadlines()
+
+        # 1) admit — bounded lookahead so a large head request cannot starve
+        #    admissible smaller requests behind it (HOL-blocking fix)
+        idx = 0
+        scanned = 0
+        while idx < len(self.queue) and scanned < self.admission_lookahead:
+            req = self.queue[idx]
+            slot = self.pool.admit(req.ctx_tokens())
             if slot is None:
-                break
-            self.queue.popleft()
+                idx += 1
+                scanned += 1
+                continue
+            del self.queue[idx]
             req.slot = slot
+            req.status = "running"
+            req.admit_clock = self.clock
             self.live[slot] = req
             self._prefill(req)
 
         if not self.live:
-            return False
+            if not self.queue:
+                return False
+            # empty batch, non-empty queue: a stall.  Tolerate a few steps
+            # (transient injected faults resolve), then fail loudly.
+            self._stall_steps += 1
+            if self._stall_steps > self.stall_patience:
+                report = self.stall_report()
+                while self.queue:
+                    req = self.queue.popleft()
+                    self._reject(req, RequestRejected(
+                        "engine stalled: request not admissible with an idle pool",
+                        rid=req.rid,
+                        blocks_needed=self.pool.blocks_for(req.ctx_tokens()),
+                        report=report,
+                    ))
+                self._stall_steps = 0
+                return False
+            return True
+        self._stall_steps = 0
 
         # 2) fused decode for all live sequences
         slots = sorted(self.live)
-        B = len(slots)
         cfg = self.cfg
         tbl_full = self.pool.block_table()
         lens_full = self.pool.seq_lens()
@@ -129,6 +312,8 @@ class ServeEngine:
 
         # 3) write current-token KV into PUMA-placed blocks, advance seqs
         for bi, slot in enumerate(slots):
+            if slot not in self.live:
+                continue                    # preempted earlier this loop
             req = self.live[slot]
             for li in range(cfg.n_layers):
                 self.pool.write_token_kv(slot, li, new_k[li, bi], new_v[li, bi])
@@ -138,22 +323,59 @@ class ServeEngine:
                 len(req.out) + 1 >= req.max_new
                 or (self.eos_id is not None and tok == self.eos_id)
             )
+            req.out.append(tok)
             if finished:
-                req.out.append(tok)
                 self.pool.release(slot)
                 del self.live[slot]
+                req.slot = None
+                req.status = "done"
                 self.done.append(req)
-            else:
-                req.out.append(tok)
-                self.pool.append_token(slot)
+            elif not self._append_with_recovery(slot):
+                self.pool.release(slot)
+                del self.live[slot]
+                req.slot = None
+                self._reject(req, RequestRejected(
+                    "KV pool cannot host the next token", rid=req.rid,
+                    decoded=len(req.out),
+                ))
         self.steps += 1
         return bool(self.live or self.queue)
 
-    def run(self, max_steps: int = 10_000) -> List[Request]:
+    def run(self, max_steps: int = 10_000, raise_on_error: bool = True) -> List[Request]:
         for _ in range(max_steps):
             if not self.step():
                 break
+        if raise_on_error:
+            if self.queue or self.live:
+                raise EngineStalled(
+                    "serving loop ended with unfinished work",
+                    report=self.stall_report(),
+                )
+            for r in self.rejected:
+                if r.error is not None:
+                    raise r.error
         return self.done
+
+    # -- introspection --------------------------------------------------------
+    def stall_report(self) -> Dict[str, object]:
+        """Snapshot of why the engine is (or was) unable to make progress."""
+        return {
+            "clock": self.clock,
+            "steps": self.steps,
+            "queued": [
+                {"rid": r.rid, "blocks_needed": self.pool.blocks_for(r.ctx_tokens()),
+                 "preemptions": r.preemptions}
+                for r in self.queue
+            ],
+            "live": len(self.live),
+            "free_tiles": self.pool.pool.free_tiles(),
+            "total_tiles": self.pool.pool.total_tiles,
+            "free_slots": len(self.pool._free_slots),
+            "done": len(self.done),
+            "rejected": len(self.rejected),
+            "cancelled": len(self.cancelled),
+            "preemptions": self.preemptions,
+        }
 
     def metrics(self) -> Dict[str, float]:
         rep = self.pool.contiguity_report()
@@ -163,6 +385,10 @@ class ServeEngine:
             frag=self.pool.pool.fragmentation(),
             align_hits=float(self.pool.pool.stats.align_hits),
             align_misses=float(self.pool.pool.stats.align_misses),
+            rejected=float(len(self.rejected)),
+            cancelled=float(len(self.cancelled)),
+            preemptions=float(self.preemptions),
+            injected_misses=float(self.pool.pool.stats.injected_misses),
         )
         return rep
 

@@ -1,0 +1,408 @@
+"""Fault injection + graceful degradation (ISSUE 7): typed error taxonomy,
+deterministic injector, blacklist/remap, the RobustAllocator fallback chain,
+faulted PUD execution, controller stalls, and the invariant auditors."""
+import numpy as np
+import pytest
+
+from repro.core.allocators import (
+    HUGE_PAGE,
+    HugePageModel,
+    PhysicalMemory,
+)
+from repro.core.arena import TilePool
+from repro.core.controller import ChannelController, DramController
+from repro.core.dram import AddressMap, DramGeometry, BANK_REGION_SCHEME
+from repro.core.puma import PumaAllocator, RobustAllocator
+from repro.core import pud
+from repro.robustness import (
+    BasePageExhausted,
+    DeadlineExceeded,
+    DoubleFree,
+    FaultInjector,
+    FaultPlan,
+    HugePageExhausted,
+    InvariantViolation,
+    PoolExhausted,
+    RequestRejected,
+    TranslationError,
+    check_allocator,
+    check_tile_pool,
+)
+
+pytestmark = pytest.mark.chaos
+
+AMAP = AddressMap()
+REGION = AMAP.region_bytes
+SMALL = AddressMap(DramGeometry(subarrays_per_bank=16))
+
+
+def fresh(n_huge=16, injector=None, amap=AMAP, **mem_kw):
+    mem = PhysicalMemory(amap, n_huge_pages=64, injector=injector, **mem_kw)
+    pa = PumaAllocator(mem, injector=injector)
+    pa.pim_preallocate(n_huge)
+    return pa
+
+
+# ---------------------------------------------------------------------------
+# error taxonomy: typed errors stay compatible with the builtins they replace
+# ---------------------------------------------------------------------------
+
+def test_error_taxonomy_builtin_compat():
+    assert issubclass(PoolExhausted, MemoryError)
+    assert issubclass(HugePageExhausted, MemoryError)
+    assert issubclass(BasePageExhausted, MemoryError)
+    assert issubclass(TranslationError, ValueError)
+    assert issubclass(DoubleFree, KeyError)
+    assert issubclass(InvariantViolation, AssertionError)
+    assert issubclass(DeadlineExceeded, RequestRejected)
+
+
+def test_error_context_in_message():
+    err = PoolExhausted("PUMA pool exhausted", wanted=7, free=3)
+    s = str(err)
+    assert "wanted=7" in s and "free=3" in s
+    assert err.ctx == {"wanted": 7, "free": 3}
+
+
+def test_typed_errors_raised_by_allocator():
+    pa = fresh(n_huge=1)
+    with pytest.raises(PoolExhausted) as ei:
+        pa.alloc((pa.free_regions() + 1) * REGION)
+    assert isinstance(ei.value, MemoryError)
+    a = pa.pim_alloc(REGION)
+    pa.pim_free(a)
+    with pytest.raises(DoubleFree):
+        pa.pim_free(a)
+    mem = PhysicalMemory(AMAP, n_huge_pages=2)
+    with pytest.raises(HugePageExhausted) as ei:
+        mem.take_huge(3)
+    assert ei.value.ctx["wanted"] == 3 and not ei.value.injected
+
+
+# ---------------------------------------------------------------------------
+# injector: determinism + rate semantics
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_validates_rates():
+    with pytest.raises(ValueError):
+        FaultPlan(rowclone_fail_rate=1.5)
+    with pytest.raises(ValueError):
+        FaultPlan(channel_stall_ns=-1.0)
+
+
+def test_injector_is_deterministic():
+    plan = FaultPlan(seed=7, rowclone_fail_rate=0.3, permanent_fraction=0.5,
+                     huge_exhaust_rate=0.2, alloc_miss_rate=0.2,
+                     channel_stall_rate=0.2)
+
+    def drive(inj):
+        trace = []
+        for _ in range(50):
+            trace.append(inj.huge_denied())
+            trace.append(inj.alloc_missed())
+            trace.append(inj.rowclone_faults(list(range(8))).tolist())
+            trace.append(inj.stall_ns())
+        return trace, inj.stats.as_dict(), sorted(inj.blacklist)
+
+    a = drive(FaultInjector(plan))
+    b = drive(FaultInjector(plan))
+    assert a == b
+    c = drive(FaultInjector(FaultPlan(seed=8, rowclone_fail_rate=0.3,
+                                      permanent_fraction=0.5,
+                                      huge_exhaust_rate=0.2,
+                                      alloc_miss_rate=0.2,
+                                      channel_stall_rate=0.2)))
+    assert a[0] != c[0]
+
+
+def test_default_plan_is_noop():
+    inj = FaultInjector()
+    assert not any(inj.huge_denied() or inj.alloc_missed() for _ in range(100))
+    assert not inj.rowclone_faults(list(range(64))).any()
+    assert inj.stall_ns() == 0.0
+    assert inj.stats.total_injected() == 0
+
+
+def test_rate_one_always_fires():
+    inj = FaultInjector(FaultPlan(huge_exhaust_rate=1.0, alloc_miss_rate=1.0,
+                                  rowclone_fail_rate=1.0,
+                                  channel_stall_rate=1.0, channel_stall_ns=42.0))
+    assert inj.huge_denied() and inj.alloc_missed()
+    assert inj.rowclone_faults([0, 1, 2]).all()
+    assert inj.stall_ns() == 42.0
+
+
+# ---------------------------------------------------------------------------
+# hook sites: huge-page denial, alloc misses, blacklisted subarrays
+# ---------------------------------------------------------------------------
+
+def test_injected_huge_denial_is_transient_and_flagged():
+    inj = FaultInjector(FaultPlan(huge_exhaust_rate=1.0))
+    mem = PhysicalMemory(AMAP, n_huge_pages=8, injector=inj)
+    with pytest.raises(HugePageExhausted) as ei:
+        mem.take_huge(2)
+    assert ei.value.injected
+    assert len(mem.free_huge) == 8          # pool untouched: transient denial
+    mem.injector = None
+    assert len(mem.take_huge(2)) == 2       # same pool succeeds without faults
+
+
+def test_injected_alloc_miss_conserves_pool():
+    inj = FaultInjector(FaultPlan(alloc_miss_rate=1.0))
+    pa = fresh(n_huge=4, injector=inj)
+    total = pa.free_regions()
+    assert pa.pim_alloc(REGION) is None
+    assert pa.free_regions() == total
+    assert pa.stats.injected_misses == 1
+    check_allocator(pa).assert_ok()
+
+
+def test_boot_blacklist_quarantines_at_preallocate():
+    probe = fresh(n_huge=4)
+    a = probe.pim_alloc(REGION)
+    dead = AMAP.region_subarray(a.extents[0].pa)
+
+    inj = FaultInjector(FaultPlan(blacklist_subarrays=(dead,)))
+    pa = fresh(n_huge=4, injector=inj)
+    assert pa.quarantined_regions() > 0
+    assert dead in pa.blacklisted_subarrays
+    assert dead not in pa.free_counts()
+    check_allocator(pa).assert_ok()
+    # nothing ever lands there
+    for _ in range(8):
+        b = pa.pim_alloc(4 * REGION)
+        assert b is not None
+        sas = AMAP.region_subarrays(np.asarray([e.pa for e in b.extents]))
+        assert dead not in sas.tolist()
+
+
+def test_blacklist_subarray_remaps_live_rows_with_data():
+    mem = PhysicalMemory(SMALL, seed=1, n_huge_pages=16, occupancy=0.1)
+    pa = PumaAllocator(mem)
+    pa.pim_preallocate(8)
+    size = 4 * SMALL.region_bytes
+    a = pa.pim_alloc(size)
+    phys = np.zeros(SMALL.total_bytes, np.uint8)
+    data = np.random.default_rng(0).integers(0, 256, size, dtype=np.uint8)
+    for e in a.extents:
+        phys[e.pa:e.pa + e.nbytes] = data[e.va_off:e.va_off + e.nbytes]
+
+    dead = SMALL.region_subarray(a.extents[0].pa)
+    remapped = pa.blacklist_subarray(dead, phys=phys)
+    assert remapped >= 1
+    assert pa.stats.remapped_regions == remapped
+    check_allocator(pa).assert_ok()
+    # same VA identity, same bytes, no extent left on the dead subarray
+    assert pa.lookup(a.va) is a
+    got = np.concatenate([phys[e.pa:e.pa + e.nbytes] for e in a.extents])
+    np.testing.assert_array_equal(got[:size], data)
+    sas = SMALL.region_subarrays(np.asarray([e.pa for e in a.extents]))
+    assert dead not in sas.tolist()
+    # aligned allocation against the remapped hint still works
+    b = pa.pim_alloc_align(size, a)
+    assert b is not None
+    check_allocator(pa).assert_ok()
+
+
+def test_blacklist_remap_raises_when_pool_dry():
+    pa = fresh(n_huge=1)
+    allocs = []
+    while True:
+        a = pa.pim_alloc(REGION)
+        if a is None:
+            break
+        allocs.append(a)
+    dead = AMAP.region_subarray(allocs[0].extents[0].pa)
+    with pytest.raises(PoolExhausted):
+        pa.blacklist_subarray(dead)
+
+
+# ---------------------------------------------------------------------------
+# RobustAllocator: bounded retry + fallback chain PUMA -> huge -> base
+# ---------------------------------------------------------------------------
+
+def test_fallback_chain_serves_from_puma_first():
+    ra = RobustAllocator(fresh(n_huge=8))
+    a = ra.alloc(4 * REGION)
+    assert ra.tier_of(a) == "puma"
+    assert ra.stats.puma == 1 and ra.stats.fallback_fraction() == 0.0
+    ra.free(a)
+    with pytest.raises(DoubleFree):
+        ra.free(a)
+
+
+def test_fallback_refills_pud_pool_before_degrading():
+    pa = fresh(n_huge=1)
+    ra = RobustAllocator(pa, refill_huge_pages=4)
+    need = pa.free_regions() + 2            # more than the pool holds now
+    a = ra.alloc(need * REGION)
+    assert ra.tier_of(a) == "puma"          # refill kept it on the PUD tier
+    assert ra.stats.refills >= 1 and ra.stats.retries >= 1
+    assert ra.stats.backoff_ns > 0
+    check_allocator(pa).assert_ok()
+
+
+def test_fallback_degrades_to_huge_then_base_then_raises():
+    amap = AddressMap(DramGeometry(subarrays_per_bank=16))
+    mem = PhysicalMemory(amap, n_huge_pages=2, occupancy=0.0)
+    pa = PumaAllocator(mem)
+    pa.pim_preallocate(1)                   # PUD pool: 1 huge page
+    ra = RobustAllocator(pa, refill_huge_pages=4)
+    pool_regions = pa.free_regions()
+
+    a = ra.alloc(pool_regions * REGION)     # drains the PUD tier exactly
+    assert ra.tier_of(a) == "puma"
+    b = ra.alloc(HUGE_PAGE)                 # refill fails (pool dry): tier 2
+    assert ra.tier_of(b) == "huge"
+    c = ra.alloc(64 * 4096)                 # huge pages gone too: tier 3
+    assert ra.tier_of(c) == "base"
+    assert ra.stats.fallback_fraction() == pytest.approx(2 / 3)
+    for x in (a, b, c):
+        ra.free(x)
+    d = ra.alloc(HUGE_PAGE)                 # freed regions revive tier 1
+    assert ra.tier_of(d) == "puma"
+    assert len(mem.free_huge) >= 1          # tier-2 pages went back to the OS
+
+
+def test_fallback_absorbs_transient_faults():
+    pa = fresh(n_huge=8)                    # seed the pool fault-free ...
+    inj = FaultInjector(FaultPlan(seed=3, alloc_miss_rate=0.5,
+                                  huge_exhaust_rate=0.5))
+    pa.injector = pa.mem.injector = inj     # ... then the machine degrades
+    ra = RobustAllocator(pa)
+    allocs = [ra.alloc(2 * REGION) for _ in range(20)]
+    assert ra.stats.served == 20            # every request was served
+    assert ra.stats.retries > 0             # ... not on the first try
+    assert ra.stats.puma > 0
+    for a in allocs:
+        ra.free(a)
+    check_allocator(pa).assert_ok()
+
+
+# ---------------------------------------------------------------------------
+# PUD execution under RowClone faults
+# ---------------------------------------------------------------------------
+
+def _puma_operands(op, size, amap, n_huge=8):
+    mem = PhysicalMemory(amap, seed=1, n_huge_pages=16, occupancy=0.1)
+    pa = PumaAllocator(mem)
+    pa.pim_preallocate(n_huge)
+    ops = [pa.pim_alloc(size)]
+    while len(ops) < pud.N_OPERANDS[op]:
+        ops.append(pa.pim_alloc_align(size, ops[0]))
+    return pa, ops
+
+
+def test_simulate_op_prices_faulted_rows():
+    size = 64 * REGION
+    _, ops = _puma_operands("copy", size, AMAP)
+    clean = pud.simulate_op("copy", ops, AMAP)
+    assert clean.pud_fraction == 1.0 and clean.faulted_rows == 0
+
+    inj = FaultInjector(FaultPlan(seed=1, rowclone_fail_rate=1.0))
+    faulty = pud.simulate_op("copy", ops, AMAP, injector=inj)
+    assert faulty.faulted_rows == 64        # every PUD row faulted
+    assert faulty.t_ns > clean.t_ns         # wasted AAPs + CPU retry
+    assert faulty.t_ns > faulty.t_cpu_ns    # degraded mode is honestly priced
+
+
+def test_execute_op_faulted_rows_still_compute_correct_bytes():
+    size = 6 * SMALL.region_bytes + 17
+    _, ops = _puma_operands("copy", size, SMALL)
+    phys = np.zeros(SMALL.total_bytes, np.uint8)
+    data = np.random.default_rng(2).integers(0, 256, size, dtype=np.uint8)
+    src, dst = ops
+    for e in src.extents:
+        n = min(e.nbytes, size - e.va_off)
+        phys[e.pa:e.pa + n] = data[e.va_off:e.va_off + n]
+
+    inj = FaultInjector(FaultPlan(seed=5, rowclone_fail_rate=0.5))
+    plan = pud.execute_op("copy", ops, phys, SMALL, injector=inj)
+    assert plan.faulted_rows > 0            # p(no fault in 7 rows) < 1%
+    out = np.zeros(size, np.uint8)
+    for e in dst.extents:
+        n = min(e.nbytes, size - e.va_off)
+        out[e.va_off:e.va_off + n] = phys[e.pa:e.pa + n]
+    np.testing.assert_array_equal(out, data)   # graceful: bytes are exact
+
+
+def test_permanent_faults_blacklist_and_quarantine():
+    size = 16 * SMALL.region_bytes
+    inj = FaultInjector(FaultPlan(seed=2, rowclone_fail_rate=0.5,
+                                  permanent_fraction=1.0))
+    mem = PhysicalMemory(SMALL, seed=1, n_huge_pages=16, occupancy=0.1)
+    pa = PumaAllocator(mem, injector=inj)
+    pa.pim_preallocate(8)
+    ops = [pa.pim_alloc(size), None]
+    ops[1] = pa.pim_alloc_align(size, ops[0])
+    phys = np.zeros(SMALL.total_bytes, np.uint8)
+    pud.execute_op("copy", ops, phys, SMALL, injector=inj)
+    assert inj.stats.permanent_faults > 0
+
+    # next allocation pulls the blacklist and remaps live rows off dead SAs
+    a = pa.pim_alloc(REGION)
+    assert a is not None
+    assert set(pa.blacklisted_subarrays) == inj.blacklist
+    check_allocator(pa).assert_ok()
+    # a replan now routes dead-subarray rows to the CPU up front
+    plan = pud.plan_rows("copy", ops, SMALL, injector=inj)
+    dead_rows = inj.blacklisted_mask(
+        pud.row_subarray_table(ops[0], SMALL)[:plan.n_rows]
+    )
+    assert not (np.asarray(plan.in_pud) & dead_rows).any()
+
+
+# ---------------------------------------------------------------------------
+# controller stalls
+# ---------------------------------------------------------------------------
+
+def test_channel_stalls_extend_busy_frontier():
+    base = ChannelController(0)
+    t_clean = base.enqueue_pud(10, 90.0)
+
+    inj = FaultInjector(FaultPlan(channel_stall_rate=1.0, channel_stall_ns=777.0))
+    cc = ChannelController(0, injector=inj)
+    t_faulty = cc.enqueue_pud(10, 90.0)
+    assert t_faulty == pytest.approx(t_clean + 777.0)
+    assert cc.stats.injected_stalls == 1
+    assert cc.stats.injected_stall_ns == pytest.approx(777.0)
+
+
+def test_peek_does_not_consume_fault_randomness():
+    amap = AddressMap(DramGeometry(channels=4, subarrays_per_bank=4),
+                      BANK_REGION_SCHEME)
+    inj = FaultInjector(FaultPlan(seed=9, channel_stall_rate=0.5))
+    ctrl = DramController(amap, injector=inj)
+    sas = np.arange(16, dtype=np.int64)
+    before = inj.stats.channel_stalls
+    ctrl.peek_pud(sas, 90.0)
+    ctrl.peek_pud(sas, 90.0)
+    assert inj.stats.channel_stalls == before    # peek is stateless
+    ctrl.dispatch_pud(sas, 90.0)
+    rep = ctrl.occupancy_report()
+    assert sum(rep["injected_stalls"]) == inj.stats.channel_stalls
+
+
+# ---------------------------------------------------------------------------
+# invariant auditors catch corruption
+# ---------------------------------------------------------------------------
+
+def test_invariant_checker_passes_clean_state_and_catches_corruption():
+    pa = fresh(n_huge=4)
+    a = pa.pim_alloc(3 * REGION)
+    check_allocator(pa).assert_ok()
+    # corrupt: hand the same region out twice (simulated double-allocation)
+    pa._regions_of[a.va].append(pa._regions_of[a.va][0])
+    rep = check_allocator(pa)
+    assert not rep.ok
+    with pytest.raises(InvariantViolation):
+        rep.assert_ok()
+
+
+def test_tile_pool_checker_catches_leak():
+    pool = TilePool(4, 8)
+    h = pool.alloc(3)
+    check_tile_pool(pool).assert_ok()
+    h.tiles.pop()                           # leak: tile neither free nor owned
+    rep = check_tile_pool(pool)
+    assert not rep.ok and any("conservation" in v for v in rep.violations)

@@ -1,0 +1,140 @@
+"""Long-horizon alloc/free churn under fault injection (ISSUE 7).
+
+10k-cycle randomized churn on :class:`PumaAllocator` and :class:`TilePool`,
+with the invariant auditors running periodically: no region/tile overlap, no
+double-free, and total_free conserved — under both interleave schemes and
+with striped and unstriped channels, with a low-rate fault injector running
+the whole time.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.allocators import PhysicalMemory
+from repro.core.arena import TilePool
+from repro.core.dram import (
+    AddressMap,
+    BANK_REGION_SCHEME,
+    CACHELINE_INTERLEAVED_SCHEME,
+    DramGeometry,
+)
+from repro.core.puma import PumaAllocator
+from repro.robustness import (
+    DoubleFree,
+    FaultInjector,
+    FaultPlan,
+    check_allocator,
+    check_tile_pool,
+)
+
+pytestmark = pytest.mark.chaos
+
+
+def hyp_seeds(func):
+    """Drive ``func(..., seed=...)`` with hypothesis when installed; fall
+    back to fixed seeds otherwise — the churn must run either way (the
+    container may not ship hypothesis, and these are the chaos-suite
+    invariant drivers)."""
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        return pytest.mark.parametrize("seed", [0xC0FFEE, 0xBADF00D])(func)
+    return settings(max_examples=2, deadline=None)(
+        given(seed=st.integers(0, 2**32 - 1))(func)
+    )
+
+
+GEO = DramGeometry(channels=4, subarrays_per_bank=4)
+SCHEMES = {
+    "bank_region": BANK_REGION_SCHEME,
+    "cacheline": CACHELINE_INTERLEAVED_SCHEME,
+}
+CYCLES = 10_000
+AUDIT_EVERY = 1_000
+
+
+@pytest.mark.parametrize("scheme", sorted(SCHEMES))
+@pytest.mark.parametrize("striped", [False, True], ids=["unstriped", "striped"])
+@hyp_seeds
+def test_puma_allocator_survives_churn(scheme, striped, seed):
+    amap = AddressMap(GEO, SCHEMES[scheme])
+    region = amap.region_bytes
+    inj = FaultInjector(FaultPlan(seed=seed, alloc_miss_rate=0.02))
+    mem = PhysicalMemory(amap, n_huge_pages=24, seed=seed % 13, injector=inj)
+    pa = PumaAllocator(mem, stripe_channels=striped, injector=inj)
+    pa.pim_preallocate(12)
+    total = pa.free_regions()
+
+    rng = random.Random(seed)
+    live = []
+    for cycle in range(CYCLES):
+        roll = rng.random()
+        if roll < 0.45 or not live:
+            a = pa.pim_alloc(rng.randint(1, 4 * region))
+            if a is not None:
+                live.append(a)
+        elif roll < 0.60 and live:
+            hint = rng.choice(live)
+            a = pa.pim_alloc_align(rng.randint(1, 3 * region), hint)
+            if a is not None:
+                live.append(a)
+        else:
+            victim = live.pop(rng.randrange(len(live)))
+            pa.pim_free(victim)
+            with pytest.raises(DoubleFree):
+                pa.pim_free(victim)         # double-free is always rejected
+        if cycle % AUDIT_EVERY == AUDIT_EVERY - 1:
+            check_allocator(pa).assert_ok()
+
+    # no overlap across everything still live
+    seen = set()
+    for a in live:
+        for e in a.extents:
+            assert e.pa not in seen
+            seen.add(e.pa)
+    # conservation: every region is free or backs a live allocation
+    used = sum(-(-a.size // region) for a in live)
+    assert pa.free_regions() + used == total
+    for a in live:
+        pa.pim_free(a)
+    assert pa.free_regions() == total
+    check_allocator(pa).assert_ok()
+
+
+@pytest.mark.parametrize("n_channels", [1, 4], ids=["unstriped", "striped"])
+@hyp_seeds
+def test_tile_pool_survives_churn(n_channels, seed):
+    inj = FaultInjector(FaultPlan(seed=seed, alloc_miss_rate=0.02))
+    pool = TilePool(16, 32, "puma", n_channels=n_channels, injector=inj)
+    total = pool.total_tiles
+
+    rng = random.Random(seed)
+    live = []
+    for cycle in range(CYCLES):
+        roll = rng.random()
+        if roll < 0.40 or not live:
+            h = pool.alloc(rng.randint(1, 12))
+            if h is not None:
+                live.append(h)
+        elif roll < 0.55:
+            h = pool.alloc_align(rng.randint(1, 8), rng.choice(live))
+            if h is not None:
+                live.append(h)
+        elif roll < 0.70:
+            pool.extend(rng.choice(live), 1)
+        else:
+            victim = live.pop(rng.randrange(len(live)))
+            pool.free(victim)
+            with pytest.raises(DoubleFree):
+                pool.free(victim)
+        if cycle % AUDIT_EVERY == AUDIT_EVERY - 1:
+            check_tile_pool(pool).assert_ok()
+
+    owned = [t for h in live for t in h.tiles]
+    assert len(set(owned)) == len(owned)            # no overlap
+    assert pool.free_tiles() + len(owned) == total  # conservation
+    for h in live:
+        pool.free(h)
+    assert pool.free_tiles() == total
+    check_tile_pool(pool).assert_ok()

@@ -1,0 +1,100 @@
+"""Edge cases of the VA->PA translation error paths (ISSUE 7 satellite):
+unmapped offsets, zero-size allocations, and out-of-range probes raise the
+typed :class:`TranslationError` (a ``ValueError``, so legacy pins hold)."""
+import numpy as np
+import pytest
+
+from repro.core.allocators import (
+    HugePageModel,
+    MallocModel,
+    PhysicalMemory,
+)
+from repro.core.dram import AddressMap
+from repro.core.puma import PumaAllocator
+from repro.robustness import TranslationError
+
+AMAP = AddressMap()
+REGION = AMAP.region_bytes
+
+
+def puma(n_huge=4):
+    mem = PhysicalMemory(AMAP, n_huge_pages=16)
+    pa = PumaAllocator(mem)
+    pa.pim_preallocate(n_huge)
+    return pa
+
+
+@pytest.fixture(params=["puma", "malloc", "huge"])
+def alloc(request):
+    if request.param == "puma":
+        return puma().pim_alloc(3 * REGION + 100)
+    mem = PhysicalMemory(AMAP, n_huge_pages=16)
+    al = MallocModel(mem) if request.param == "malloc" else HugePageModel(mem)
+    return al.alloc(3 * REGION + 100)
+
+
+def test_pa_of_out_of_range_raises_typed(alloc):
+    padded = sum(e.nbytes for e in alloc.extents)
+    for off in (-1, padded, padded + REGION, 2**40):
+        with pytest.raises(TranslationError) as ei:
+            alloc.pa_of(off)
+        assert isinstance(ei.value, ValueError)       # legacy pin holds
+        assert ei.value.ctx["va_off"] == off
+        assert ei.value.ctx["size"] == alloc.size
+
+
+def test_pa_of_boundaries_are_exact(alloc):
+    padded = sum(e.nbytes for e in alloc.extents)
+    assert alloc.pa_of(0) == alloc.extents[0].pa
+    last = alloc.extents[-1]
+    assert alloc.pa_of(padded - 1) == last.pa + last.nbytes - 1
+    with pytest.raises(TranslationError):
+        alloc.pa_of(padded)
+
+
+def test_contiguous_run_unmapped_start_raises(alloc):
+    padded = sum(e.nbytes for e in alloc.extents)
+    for off in (-1, padded, padded + 5):
+        with pytest.raises(TranslationError):
+            alloc.contiguous_run(off, 1)
+
+
+def test_contiguous_run_end_overflow_returns_none(alloc):
+    # mapped start, end past the mapping: not a contiguous run, not an error
+    padded = sum(e.nbytes for e in alloc.extents)
+    assert alloc.contiguous_run(padded - 1, 2) is None
+    assert alloc.contiguous_run(0, padded + 1) is None
+
+
+def test_runs_raises_on_unmapped_span(alloc):
+    padded = sum(e.nbytes for e in alloc.extents)
+    with pytest.raises(TranslationError):
+        list(alloc.runs(padded - 10, 20))
+    # full-span walk covers every byte exactly once
+    total = sum(n for _, n in alloc.runs(0, padded))
+    assert total == padded
+
+
+def test_zero_size_allocation_translates_nowhere():
+    pa = puma()
+    total = pa.free_regions()
+    a = pa.pim_alloc(0)
+    assert a is not None and a.size == 0 and a.extents == []
+    assert pa.free_regions() == total          # consumed no regions
+    for off in (0, 1, -1):
+        with pytest.raises(TranslationError):
+            a.pa_of(off)
+        with pytest.raises(TranslationError):
+            a.contiguous_run(off, 1)
+    assert list(a.runs(0, 0)) == []            # empty walk is legal
+    pa.pim_free(a)                             # and it is recyclable
+    assert pa.free_regions() == total
+
+
+def test_translation_error_is_catchable_as_value_error(alloc):
+    try:
+        alloc.pa_of(-5)
+    except ValueError as e:                    # pre-taxonomy call sites
+        assert isinstance(e, TranslationError)
+    else:
+        pytest.fail("expected a ValueError")
