@@ -107,6 +107,37 @@ def _channel_view(emit: Callable[[str, float, float], None]) -> Dict:
     return out
 
 
+def run_churned(
+    emit: Callable[[str, float, float], None], cycles: int
+) -> Dict:
+    """``--churn-cycles N`` mode: the §1 figure of merit measured against a
+    churn-*aged* PUMA pool instead of a fresh one — fresh fraction, aged
+    fraction, and the fraction after watermark compaction (the long-horizon
+    counterpart of the static table; full curves live in
+    ``benchmarks/churn_bench.py``)."""
+    try:
+        from benchmarks.churn_bench import _puma_arm
+    except ImportError:       # invoked as a script from inside benchmarks/
+        from churn_bench import _puma_arm
+
+    sample_every = max(1, cycles // 20)
+    aged, _, _ = _puma_arm(cycles, sample_every, compaction=False)
+    compacted, _, _ = _puma_arm(cycles, sample_every, compaction=True)
+    out = {
+        "cycles": cycles,
+        "fresh": aged["frac_start"],
+        "aged": aged["frac_end"],
+        "compacted": compacted["frac_end"],
+        "compaction_passes": len(compacted["compactions"]),
+    }
+    emit(f"alloc_fraction/churned/{cycles}/fresh",
+         1e6 * aged["seconds"], out["fresh"])
+    emit(f"alloc_fraction/churned/{cycles}/aged", 0.0, out["aged"])
+    emit(f"alloc_fraction/churned/{cycles}/compacted",
+         1e6 * compacted["seconds"], out["compacted"])
+    return out
+
+
 def run(emit: Callable[[str, float, float], None]) -> Dict:
     amap = AddressMap()
     allocators = {
@@ -131,3 +162,31 @@ def run(emit: Callable[[str, float, float], None]) -> Dict:
             table.setdefault(f"{op}/puma", {})[bits] = f
     table["channel_view"] = _channel_view(emit)
     return table
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--churn-cycles", type=int, default=0, metavar="N",
+        help="age the PUMA pool with N alloc/free cycles before measuring "
+             "(reports fresh vs aged vs compacted fractions)",
+    )
+    args = ap.parse_args()
+
+    def emit(name: str, us: float, derived) -> None:
+        print(f"{name},{us:.1f},{derived}")
+
+    if args.churn_cycles:
+        out = run_churned(emit, args.churn_cycles)
+        print(f"[alloc_fraction] churned {out['cycles']} cycles: "
+              f"fresh={out['fresh']} aged={out['aged']} "
+              f"compacted={out['compacted']} "
+              f"({out['compaction_passes']} passes)")
+    else:
+        run(emit)
+
+
+if __name__ == "__main__":
+    main()

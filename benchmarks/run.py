@@ -13,6 +13,9 @@ aggregator that folds every persisted ``BENCH_*.json`` into one summary.
                       (persists BENCH_channels.json)
   * chaos_bench     — degraded-mode metrics under the fixed-seed fault
                       plan (persists BENCH_faults.json)
+  * churn_bench     — long-horizon aging: executable-fraction decay per
+                      allocator + watermark compaction recovery + journal
+                      crash/replay (persists BENCH_churn.json)
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--smoke`` shrinks the
 persisted microbenchmarks for CI; ``--only translate`` runs just one
@@ -93,6 +96,7 @@ def main() -> None:
             alloc_fraction,
             channel_bench,
             chaos_bench,
+            churn_bench,
             kernel_bench,
             kv_pool_bench,
             microbench,
@@ -115,6 +119,7 @@ def main() -> None:
             "translate": lambda: translate_bench.run(emit, smoke=args.smoke),
             "channels": lambda: channel_bench.run(emit, smoke=args.smoke),
             "chaos": lambda: chaos_bench.run(emit, smoke=args.smoke),
+            "churn": lambda: churn_bench.run(emit, smoke=args.smoke),
         }
         selected = {
             name: fn

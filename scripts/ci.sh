@@ -2,7 +2,9 @@
 # Lightweight CI: tier-1 test suite + the persisted microbenchmarks in
 # smoke mode (BENCH_translate.json and BENCH_channels.json for the perf
 # trajectory), each gated on its speedup floors, plus the fixed-seed
-# chaos gate (fault-injection suite + BENCH_faults.json assertions).
+# chaos gate (fault-injection suite + BENCH_faults.json assertions) and
+# the fixed-seed churn gate (long-horizon aging suite + compaction
+# recovery / journal-replay assertions on BENCH_churn.json).
 #
 #   bash scripts/ci.sh
 set -euo pipefail
@@ -87,4 +89,39 @@ gate("serve recovery", s["done"] > 0 and s["injected_misses"] > 0,
      f"{s['injected_misses']} injected misses, {s['preemptions']} preemptions")
 raise SystemExit(1 if fails else 0)
 EOF
+
+echo "== churn suite (fixed-seed aging gate) =="
+python -m pytest -m churn -q
+
+echo "== churn benchmark (smoke) =="
+PYTHONPATH="src:." python benchmarks/churn_bench.py --smoke --gate
+
+echo "== BENCH_churn.json =="
+python - <<'EOG'
+import json
+rec = json.load(open("BENCH_churn.json"))
+fails = []
+def gate(name, cond, detail):
+    print(f"  {'ok' if cond else 'FAIL'}: {name} ({detail})")
+    if not cond:
+        fails.append(name)
+
+p, c = rec["alloc/puma"], rec["alloc/puma_compact"]
+# churn must actually erode the PUD-executable fraction...
+gate("puma decay", p["frac_end"] < p["frac_start"] - 0.05,
+     f"{p['frac_start']:.3f} -> {p['frac_end']:.3f} over {p['n']} cycles")
+# ...and watermark compaction must win back >= half of what was lost
+gate("compaction recovery", c["recovery"] >= 0.5,
+     f"recovery={c['recovery']:.2%}, {len(c['compactions'])} passes")
+gate("migration bit-exact", c["bit_exact"] is True, "live data intact")
+j = rec["journal/crash_replay"]
+gate("crash replay", j["identical"] is True
+     and j["crash_replay_deterministic"] is True,
+     f"{j['kept_events']}/{j['n']} events survive the crash cut")
+s = rec["pool/serving_trace"]
+gate("serving trace", s["bit_exact"] is True
+     and s["replay_matches_live"] is True,
+     f"{len(s['compactions'])} watermark passes")
+raise SystemExit(1 if fails else 0)
+EOG
 echo "CI OK"

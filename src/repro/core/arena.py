@@ -43,9 +43,11 @@ import random
 from typing import TYPE_CHECKING, Dict, List, Optional, Sequence
 
 from repro.robustness.errors import DoubleFree
+from repro.robustness.faults import injected_alloc_miss
 
 if TYPE_CHECKING:
     from repro.robustness.faults import FaultInjector
+    from repro.robustness.journal import Journal
 
 __all__ = ["TileHandle", "PoolStats", "TilePool"]
 
@@ -113,6 +115,7 @@ class TilePool:
         seed: int = 0,
         n_channels: int = 1,
         injector: Optional["FaultInjector"] = None,
+        journal: Optional["Journal"] = None,
     ):
         assert policy in self.POLICIES, policy
         assert n_channels >= 1 and n_arenas % n_channels == 0, (
@@ -146,13 +149,13 @@ class TilePool:
         #: fault injector consulted on alloc/extend (transient device-pool
         #: misses — what drives the serving engine's preemption path).
         self.injector = injector
+        #: crash-consistency journal — records every alloc/extend/free
+        #: outcome (actual tile placements) for forced bit-exact replay.
+        self.journal = journal
 
     def _injected_miss(self) -> bool:
-        if self.injector is not None and self.injector.alloc_missed():
-            self.stats.failed += 1
-            self.stats.injected_misses += 1
-            return True
-        return False
+        """Shared hook — see :func:`repro.robustness.faults.injected_alloc_miss`."""
+        return injected_alloc_miss(self.injector, self.stats, "failed")
 
     # -- bookkeeping ---------------------------------------------------------
     @property
@@ -231,6 +234,16 @@ class TilePool:
     def _global_to_arena(self, tile: int) -> int:
         return tile // self.tiles_per_arena
 
+    def _register(self, tiles: List[int]) -> TileHandle:
+        """Wrap freshly taken tiles in a live handle (+ journal the outcome)."""
+        h = TileHandle(self._next_hid, tiles)
+        self._next_hid += 1
+        self._handles[h.hid] = h
+        if self.journal is not None:
+            self.journal.append("alloc", hid=h.hid, tiles=list(tiles))
+        self.stats.allocs += 1
+        return h
+
     # -- PUMA API ------------------------------------------------------------
     def alloc(self, n_tiles: int) -> Optional[TileHandle]:
         if self._injected_miss():
@@ -291,11 +304,7 @@ class TilePool:
                 tiles.append(a * self.tiles_per_arena + s)
                 if not free:
                     candidates.remove(a)
-        h = TileHandle(self._next_hid, tiles)
-        self._next_hid += 1
-        self._handles[h.hid] = h
-        self.stats.allocs += 1
-        return h
+        return self._register(tiles)
 
     def alloc_align(self, n_tiles: int, hint: TileHandle) -> Optional[TileHandle]:
         if hint.hid not in self._handles:
@@ -339,11 +348,7 @@ class TilePool:
                     return None
                 placed = self._take_slot(a)
             tiles.append(placed)
-        h = TileHandle(self._next_hid, tiles)
-        self._next_hid += 1
-        self._handles[h.hid] = h
-        self.stats.allocs += 1
-        return h
+        return self._register(tiles)
 
     def extend(self, handle: TileHandle, n_more: int = 1) -> bool:
         """Grow a live handle (KV-cache decode step): prefer the slot after
@@ -385,6 +390,8 @@ class TilePool:
                 else:
                     placed = self._take_slot(a)
             handle.tiles.append(placed)
+            if self.journal is not None:
+                self.journal.append("extend", hid=handle.hid, tile=placed)
         return True
 
     def _give_back(self, tile: int) -> None:
@@ -400,6 +407,8 @@ class TilePool:
         del self._handles[handle.hid]
         for t in handle.tiles:
             self._give_back(t)
+        if self.journal is not None:
+            self.journal.append("free", hid=handle.hid)
         self.stats.frees += 1
 
     # -- metrics ---------------------------------------------------------------

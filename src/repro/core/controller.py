@@ -316,6 +316,36 @@ class DramController:
         self.now_ns = max(self.now_ns, done)
         return done
 
+    # -- compaction / migration traffic ---------------------------------------
+    def dispatch_migration(
+        self,
+        rowclone_subarrays: np.ndarray,
+        row_ns: float,
+        cpu_pas: Optional[np.ndarray] = None,
+        now_ns: Optional[float] = None,
+    ) -> float:
+        """Queue one compaction pass's data movement on the channels.
+
+        ``rowclone_subarrays`` — one global-subarray ID per same-subarray row
+        copy: the substrate executes these in DRAM (RowClone FPM), so they
+        enqueue as a PUD burst per owning channel.  ``cpu_pas`` — cacheline
+        PAs touched by the cross-subarray copies the substrate cannot do
+        (read at the source + write at the destination): they enqueue as
+        normal FR-FCFS accesses, paying the SB<->PIM mode switch against any
+        interleaved PUD traffic.  Returns the pass completion time; the
+        channels stay busy until then, which is how background compaction
+        competes with live traffic in the cost model.
+        """
+        now = self.now_ns if now_ns is None else now_ns
+        done = now
+        sas = np.asarray(rowclone_subarrays, dtype=np.int64)
+        if sas.size:
+            done = max(done, self.dispatch_pud(sas, row_ns, now).done_ns)
+        if cpu_pas is not None and len(cpu_pas):
+            done = max(done, self.dispatch_accesses(cpu_pas, now))
+        self.now_ns = max(self.now_ns, done)
+        return done
+
     # -- metrics -------------------------------------------------------------
     def occupancy_report(self) -> Dict[str, object]:
         """Per-channel occupancy + load balance — the channel figure of merit.

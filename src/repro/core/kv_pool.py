@@ -30,6 +30,7 @@ from repro.core.arena import TileHandle, TilePool
 
 if TYPE_CHECKING:
     from repro.robustness.faults import FaultInjector
+    from repro.robustness.journal import Journal
 
 __all__ = ["KVPoolConfig", "PagedKVPool"]
 
@@ -65,11 +66,19 @@ class KVPoolConfig:
 class PagedKVPool:
     """Host bookkeeping + device buffers for paged KV serving."""
 
-    def __init__(self, cfg: KVPoolConfig, injector: Optional["FaultInjector"] = None):
+    def __init__(
+        self,
+        cfg: KVPoolConfig,
+        injector: Optional["FaultInjector"] = None,
+        journal: Optional["Journal"] = None,
+    ):
         self.cfg = cfg
+        #: crash-consistency journal, shared with the inner tile pool so
+        #: slot-level (kv_*) and tile-level events form one total order.
+        self.journal = journal
         self.pool = TilePool(
             cfg.n_arenas, cfg.blocks_per_arena, cfg.policy,
-            n_channels=cfg.n_channels, injector=injector,
+            n_channels=cfg.n_channels, injector=injector, journal=journal,
         )
         dt = jnp.dtype(cfg.dtype)
         shape = (cfg.n_layers, cfg.num_blocks, cfg.block_size, cfg.kv_heads, cfg.head_dim)
@@ -101,6 +110,10 @@ class PagedKVPool:
             return None
         slot = self._free_slots.pop(0)
         self._seqs[slot] = (h, n_prompt_tokens)
+        if self.journal is not None:
+            self.journal.append(
+                "kv_admit", slot=slot, hid=h.hid, ntok=n_prompt_tokens
+            )
         return slot
 
     def fork(
@@ -135,6 +148,8 @@ class PagedKVPool:
             self.v = pool_block_copy(vflat, src_all, dst_all, use_kernel=use_kernel).reshape(self.v.shape)
         new_slot = self._free_slots.pop(0)
         self._seqs[new_slot] = (h, ntok)
+        if self.journal is not None:
+            self.journal.append("kv_fork", slot=new_slot, hid=h.hid, ntok=ntok)
         return new_slot
 
     def append_token(self, slot: int) -> bool:
@@ -145,12 +160,73 @@ class PagedKVPool:
             if not self.pool.extend(h, 1):
                 return False
         self._seqs[slot] = (h, ntok)
+        if self.journal is not None:
+            self.journal.append("kv_append", slot=slot)
         return True
 
     def release(self, slot: int) -> None:
         h, _ = self._seqs.pop(slot)
         self.pool.free(h)
+        if self.journal is not None:
+            self.journal.append("kv_release", slot=slot)
         self._free_slots.append(slot)
+
+    # -- maintenance ----------------------------------------------------------
+    def compact(
+        self,
+        max_moves: int = 128,
+        use_kernel: bool = False,
+        model=None,
+        controller=None,
+    ):
+        """One defragmentation pass over the block pool.
+
+        Plans with :func:`~repro.robustness.compaction.plan_pool_compaction`
+        (intra-arena run repair first — RowClone-cheap — then arena
+        evacuation), applies every planned move to the device K/V buffers
+        with one batched ``pool_block_copy`` per pool (the plan guarantees
+        sources and destinations are disjoint), then commits the
+        bookkeeping through :func:`~repro.robustness.compaction.compact_pool`
+        — which journals the pass and prices it.  Live block tables pick up
+        the new placement automatically because the moves mutate the
+        handles' tile lists in place.
+
+        Returns the :class:`~repro.robustness.compaction.CompactionReport`,
+        or ``None`` when the planner found nothing worth moving.
+        """
+        from repro.robustness.compaction import compact_pool, plan_pool_compaction
+
+        plan = plan_pool_compaction(self.pool, max_moves=max_moves)
+        if not plan.moves:
+            return None
+        from repro.kernels.pud_bulk.ops import pool_block_copy
+
+        src = jnp.asarray([m.src for m in plan.moves], jnp.int32)
+        dst = jnp.asarray([m.dst for m in plan.moves], jnp.int32)
+        L = self.cfg.n_layers
+        nb = self.cfg.num_blocks
+        # fold the layer dim into the block index so one kernel call moves
+        # every layer's pages (same trick as fork)
+        offs = (jnp.arange(L, dtype=jnp.int32) * nb)[:, None]
+        src_all = (src[None, :] + offs).reshape(-1)
+        dst_all = (dst[None, :] + offs).reshape(-1)
+        kflat = self.k.reshape((L * nb,) + self.k.shape[2:])
+        vflat = self.v.reshape((L * nb,) + self.v.shape[2:])
+        self.k = pool_block_copy(
+            kflat, src_all, dst_all, use_kernel=use_kernel
+        ).reshape(self.k.shape)
+        self.v = pool_block_copy(
+            vflat, src_all, dst_all, use_kernel=use_kernel
+        ).reshape(self.v.shape)
+        cfg = self.cfg
+        tile_bytes = (
+            2 * cfg.n_layers * cfg.block_size * cfg.kv_heads * cfg.head_dim
+            * jnp.dtype(cfg.dtype).itemsize
+        )
+        return compact_pool(
+            self.pool, plan,
+            tile_bytes=tile_bytes, model=model, controller=controller,
+        )
 
     # -- device views -----------------------------------------------------------
     def block_table(self) -> np.ndarray:

@@ -85,6 +85,8 @@ __all__ = [
     "plan_rows",
     "simulate_op",
     "execute_op",
+    "MigrationCost",
+    "price_migration",
 ]
 
 
@@ -349,6 +351,73 @@ def simulate_op(
             controller.dispatch_pud(plan.pud_subarrays(), row_ns)
     return SimResult(
         op, size, plan.pud_fraction, t, t_cpu, rows_per_channel, n_faulted
+    )
+
+
+# ---------------------------------------------------------------------------
+# Migration pricing: what one compaction pass costs (ISSUE 8).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MigrationCost:
+    """Price of one compaction pass's data movement."""
+
+    rowclone_rows: int          # same-subarray moves executed as RowClone
+    cpu_rows: int               # cross-subarray moves the substrate can't do
+    bytes_moved: int
+    rowclone_ns: float          # in-DRAM burst latency (channel-parallel)
+    cpu_copy_ns: float          # host-side streaming copy time
+    @property
+    def total_ns(self) -> float:
+        return self.rowclone_ns + self.cpu_copy_ns
+
+
+def price_migration(
+    rowclone_subarrays: Sequence[int],
+    cpu_rows: int,
+    row_bytes: int,
+    *,
+    channels: int = 1,
+    model: PudCostModel = PudCostModel(),
+    controller: Optional[DramController] = None,
+    cpu_pas: Optional[np.ndarray] = None,
+) -> MigrationCost:
+    """Price one compaction pass (see :mod:`repro.robustness.compaction`).
+
+    Same-subarray moves are RowClone FPM row copies — ``pud_row_ns("copy")``
+    per row, executed channel-parallel (``rowclone_subarrays`` carries one
+    global subarray/arena ID per such move; the owning channel is
+    ``id % channels``).  Cross-subarray moves fall back to a host streaming
+    copy priced by :meth:`PudCostModel.cpu_ns`, one op-call overhead per
+    pass.  With a ``controller``, both kinds are *dispatched* — the RowClone
+    rows as PUD bursts, the CPU copies' cacheline traffic (``cpu_pas``) as
+    normal accesses — so the pass occupies the channel frontiers and
+    competes with live traffic; the maintenance pass itself is serial
+    (RowClone burst, then the host copy), matching a stop-the-row background
+    defragmenter.
+    """
+    row_ns = model.pud_row_ns("copy")
+    sas = np.asarray(rowclone_subarrays, dtype=np.int64)
+    if controller is not None:
+        start = controller.now_ns
+        done = controller.dispatch_migration(sas, row_ns, cpu_pas)
+        rowclone_ns = done - start
+    elif sas.size:
+        counts = np.bincount(sas % channels, minlength=channels)
+        rowclone_ns = float(int(counts.max()) * row_ns)
+    else:
+        rowclone_ns = 0.0
+    cpu_copy_ns = 0.0
+    if cpu_rows:
+        cpu_copy_ns = model.cpu_op_overhead_ns + model.cpu_ns(
+            "copy", cpu_rows * row_bytes, cpu_rows
+        )
+    return MigrationCost(
+        rowclone_rows=int(sas.size),
+        cpu_rows=int(cpu_rows),
+        bytes_moved=(int(sas.size) + int(cpu_rows)) * row_bytes,
+        rowclone_ns=rowclone_ns,
+        cpu_copy_ns=cpu_copy_ns,
     )
 
 

@@ -46,8 +46,11 @@ from repro.robustness.errors import (
     PoolExhausted,
 )
 
+from repro.robustness.faults import injected_alloc_miss
+
 if TYPE_CHECKING:
     from repro.robustness.faults import FaultInjector
+    from repro.robustness.journal import Journal
 
 __all__ = ["PumaStats", "PumaAllocator", "FallbackStats", "RobustAllocator"]
 
@@ -136,6 +139,20 @@ class _OrderedArray:
         self._total_ch[subarray % self.channels] -= 1
         return pa
 
+    def take_specific(self, subarray: int, pa: int) -> bool:
+        """Remove one *specific* region PA from a subarray's free list —
+        the forced-placement primitive journal replay uses to reproduce the
+        original allocator's decisions exactly (worst-fit tie-breaks are
+        irrelevant when every placement is replayed from the log)."""
+        lst = self.free.get(subarray)
+        if not lst or pa not in lst:
+            return False
+        lst.remove(pa)
+        self._push(subarray)
+        self._total -= 1
+        self._total_ch[subarray % self.channels] -= 1
+        return True
+
     def worst_fit_subarray(self, channel: Optional[int] = None) -> Optional[int]:
         """Subarray with the largest number of free regions (lazy heap);
         restricted to one channel's subarrays when ``channel`` is given."""
@@ -182,6 +199,7 @@ class PumaAllocator:
         *,
         stripe_channels: bool = False,
         injector: Optional["FaultInjector"] = None,
+        journal: Optional["Journal"] = None,
     ):
         self.mem = mem
         self.amap = amap or mem.amap
@@ -210,6 +228,10 @@ class PumaAllocator:
         if injector is not None:
             for sa in sorted(injector.blacklist):
                 self._blacklisted.add(sa)
+        #: crash-consistency journal (``repro.robustness.journal``): every
+        #: state-changing operation appends its *outcome* (actual placements)
+        #: so replay is forced and bit-exact; None = not journaled.
+        self.journal = journal
 
     # -- 1) pre-allocation (paper step (1)) ---------------------------------
     def pim_preallocate(self, n_huge_pages: int) -> int:
@@ -222,6 +244,8 @@ class PumaAllocator:
         hps = self.mem.take_huge(n_huge_pages)
         if not hps:
             return 0
+        if self.journal is not None:
+            self.journal.append("prealloc", hps=list(hps))
         rb = self.region_bytes
         per_hp = np.arange(HUGE_PAGE // rb, dtype=np.int64) * rb
         rpas = (np.asarray(hps, dtype=np.int64)[:, None] + per_hp).ravel()
@@ -253,6 +277,10 @@ class PumaAllocator:
         alloc = Allocation(va, size, extents, self.name)
         self._allocations[va] = alloc
         self._regions_of[va] = region_pas
+        if self.journal is not None:
+            self.journal.append(
+                "alloc", va=va, size=size, regions=list(region_pas)
+            )
         self.stats.live_allocations += 1
         self.stats.regions_in_use += len(region_pas)
         if self.n_channels > 1:
@@ -289,12 +317,9 @@ class PumaAllocator:
         self._ordered.add_regions(sas, pas)
 
     def _injected_miss(self) -> bool:
-        """Transient fragmented-arena miss forced by the fault injector."""
-        if self.injector is not None and self.injector.alloc_missed():
-            self.stats.failed_allocs += 1
-            self.stats.injected_misses += 1
-            return True
-        return False
+        """Transient fragmented-arena miss forced by the fault injector
+        (shared hook — see :func:`repro.robustness.faults.injected_alloc_miss`)."""
+        return injected_alloc_miss(self.injector, self.stats, "failed_allocs")
 
     # -- 2) first allocation: worst-fit (paper step (2)) ----------------------
     def pim_alloc(self, size: int) -> Optional[Allocation]:
@@ -395,6 +420,8 @@ class PumaAllocator:
             )
         region_pas = self._regions_of.pop(alloc.va)
         del self._allocations[alloc.va]
+        if self.journal is not None:
+            self.journal.append("free", va=alloc.va)
         self._release(region_pas)
         self.stats.live_allocations -= 1
         self.stats.regions_in_use -= len(region_pas)
@@ -428,6 +455,7 @@ class PumaAllocator:
             self._quarantined.extend(drained)
             self.stats.quarantined_regions += len(drained)
         remapped = 0
+        remap_log: List[List[int]] = []   # [va, k, old_pa, new_pa] per move
         rb = self.region_bytes
         for va, regions in self._regions_of.items():
             if not regions:
@@ -450,6 +478,7 @@ class PumaAllocator:
                 self._quarantined.append(old_pa)
                 self.stats.quarantined_regions += 1
                 regions[k] = new_pa
+                remap_log.append([va, k, old_pa, new_pa])
                 remapped += 1
                 if self.n_channels > 1:
                     self._used_per_channel[
@@ -464,6 +493,10 @@ class PumaAllocator:
             ]
             alloc.__post_init__()
         self.stats.remapped_regions += remapped
+        if self.journal is not None:
+            self.journal.append(
+                "blacklist", sa=sa, drained=list(drained), remaps=remap_log
+            )
         return remapped
 
     @property
@@ -483,6 +516,24 @@ class PumaAllocator:
     def free_counts(self) -> Dict[int, int]:
         return self._ordered.free_counts()
 
+    def fragmentation(self) -> float:
+        """1 - (largest per-subarray free count / total free) — the allocator
+        mirror of :meth:`repro.core.arena.TilePool.fragmentation`.
+
+        Regions inside one subarray are interchangeable for PUD placement, so
+        the "largest free run" at this layer is the biggest block of
+        co-locatable free regions: 0.0 means all free capacity sits in one
+        subarray (any future aligned pair co-locates), values near 1.0 mean
+        the free capacity is spread one region per subarray and
+        ``pim_alloc_align`` is doomed to worst-fit misses — the churn-decay
+        signal the long-horizon benchmark tracks.
+        """
+        total = self._ordered.total_free()
+        if total == 0:
+            return 0.0
+        best = max((len(v) for v in self._ordered.free.values()), default=0)
+        return 1.0 - best / total
+
     def channel_report(self) -> Dict[str, object]:
         """Per-channel pool state — the placement-balance figure of merit.
 
@@ -497,6 +548,7 @@ class PumaAllocator:
             "free_regions": self._ordered.channel_free(),
             "used_regions": used.tolist(),
             "used_balance": float(used.mean() / mx) if mx > 0 else 1.0,
+            "fragmentation": self.fragmentation(),
         }
 
     # uniform interface with the baseline allocators

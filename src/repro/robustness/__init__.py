@@ -13,6 +13,7 @@ from repro.robustness.errors import (  # noqa: F401
     EngineStalled,
     HugePageExhausted,
     InvariantViolation,
+    JournalReplayError,
     PoolExhausted,
     PudExecError,
     PumaAllocError,
@@ -24,21 +25,40 @@ from repro.robustness.errors import (  # noqa: F401
 )
 from repro.robustness.faults import FaultInjector, FaultPlan, FaultStats  # noqa: F401
 
-_LAZY = ("InvariantReport", "check_allocator", "check_tile_pool",
-         "check_kv_pool", "check_engine")
+# invariants / journal / compaction inspect the core pools, so they load
+# lazily (core imports errors/faults/journal-type-hints from us).
+_LAZY_INVARIANTS = ("InvariantReport", "check_allocator", "check_tile_pool",
+                    "check_kv_pool", "check_engine")
+_LAZY_JOURNAL = ("Event", "Journal", "snapshot_allocator", "restore_allocator",
+                 "snapshot_pool", "restore_pool", "replay_allocator",
+                 "replay_pool", "replay_kv_pool", "allocator_digest",
+                 "pool_digest", "kv_pool_digest")
+_LAZY_COMPACTION = ("Move", "CompactionPlan", "CompactionReport",
+                    "plan_allocator_compaction", "compact_allocator",
+                    "plan_pool_compaction", "compact_pool")
 
 __all__ = [
     "PumaError", "PumaAllocError", "PoolExhausted", "HugePageExhausted",
     "BasePageExhausted", "TilePoolExhausted", "DoubleFree",
     "TranslationError", "PudExecError", "RowCloneFault", "RequestRejected",
     "DeadlineExceeded", "EngineStalled", "InvariantViolation",
-    "FaultPlan", "FaultStats", "FaultInjector", *_LAZY,
+    "JournalReplayError",
+    "FaultPlan", "FaultStats", "FaultInjector",
+    *_LAZY_INVARIANTS, *_LAZY_JOURNAL, *_LAZY_COMPACTION,
 ]
 
 
 def __getattr__(name):
-    if name in _LAZY:
+    if name in _LAZY_INVARIANTS:
         from repro.robustness import invariants
 
         return getattr(invariants, name)
+    if name in _LAZY_JOURNAL:
+        from repro.robustness import journal
+
+        return getattr(journal, name)
+    if name in _LAZY_COMPACTION:
+        from repro.robustness import compaction
+
+        return getattr(compaction, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

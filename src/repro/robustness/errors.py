@@ -48,6 +48,7 @@ __all__ = [
     "DeadlineExceeded",
     "EngineStalled",
     "InvariantViolation",
+    "JournalReplayError",
 ]
 
 
@@ -160,3 +161,9 @@ class EngineStalled(PumaError):
 
 class InvariantViolation(PumaError, AssertionError):
     """Pool-state corruption detected by the invariant checker."""
+
+
+class JournalReplayError(PumaError, RuntimeError):
+    """A journal event could not be applied during forced replay — the log
+    is corrupt (truncated mid-event, tampered payload) or is being replayed
+    against a machine with different geometry than the one that wrote it."""

@@ -35,7 +35,26 @@ from typing import Iterable, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-__all__ = ["FaultPlan", "FaultStats", "FaultInjector"]
+__all__ = ["FaultPlan", "FaultStats", "FaultInjector", "injected_alloc_miss"]
+
+
+def injected_alloc_miss(
+    injector: Optional["FaultInjector"], stats, failed_attr: str = "failed"
+) -> bool:
+    """Shared transient-miss hook for pool allocators.
+
+    Consults ``injector.alloc_missed()`` and, when the miss fires, bumps the
+    caller's failure counter (``failed_attr`` — ``failed`` on
+    :class:`~repro.core.arena.PoolStats`, ``failed_allocs`` on
+    :class:`~repro.core.puma.PumaStats`) plus its ``injected_misses``.
+    ``PumaAllocator`` and ``TilePool`` both delegate their ``_injected_miss``
+    to this one helper so the miss semantics cannot drift apart.
+    """
+    if injector is None or not injector.alloc_missed():
+        return False
+    setattr(stats, failed_attr, getattr(stats, failed_attr) + 1)
+    stats.injected_misses += 1
+    return True
 
 
 @dataclasses.dataclass(frozen=True)

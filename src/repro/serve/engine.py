@@ -60,6 +60,28 @@ if TYPE_CHECKING:
     from repro.robustness.faults import FaultInjector
 
 
+@dataclasses.dataclass(frozen=True)
+class MaintenanceConfig:
+    """Watermarks for the background compaction hook in :meth:`ServeEngine.step`.
+
+    A pass triggers when the pool's free-tile fraction falls below
+    ``free_low`` *or* its fragmentation rises above ``frag_high`` *or* the
+    live block tables' mean contiguous-run fraction falls below
+    ``contig_low`` — but at most once every ``every`` engine clock ticks, so
+    maintenance cannot monopolise the step loop.  ``max_moves`` bounds one
+    pass; the pass cost (RowClone rows + host copies, see
+    :func:`repro.core.pud.price_migration`) lands in the engine's
+    ``maintenance_ns`` counter, competing with live traffic in the cost
+    model.
+    """
+
+    free_low: float = 0.25
+    frag_high: float = 0.5
+    contig_low: float = 0.85
+    max_moves: int = 32
+    every: int = 4
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -95,6 +117,7 @@ class ServeEngine:
         injector: Optional["FaultInjector"] = None,
         admission_lookahead: int = 8,
         stall_patience: int = 3,
+        maintenance: Optional[MaintenanceConfig] = None,
     ):
         cfg = model.cfg
         assert pool_cfg.kv_heads == cfg.n_kv_heads and pool_cfg.head_dim == cfg.hd
@@ -118,6 +141,12 @@ class ServeEngine:
         self.preemptions = 0
         self.submitted = 0
         self._stall_steps = 0
+        # background maintenance (watermark-triggered compaction)
+        self.maintenance = maintenance
+        self.maintenance_ns = 0.0
+        self.compaction_passes = 0
+        self.blocks_migrated = 0
+        self._last_maintenance = -(10 ** 9)
 
     # -- submission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -215,6 +244,28 @@ class ServeEngine:
             self._preempt(victim)
         return self.pool.append_token(slot)
 
+    # -- background maintenance ------------------------------------------------
+    def _maybe_maintain(self) -> None:
+        """Run one compaction pass when a watermark trips (rate-limited)."""
+        mc = self.maintenance
+        if mc is None or self.clock - self._last_maintenance < mc.every:
+            return
+        pool = self.pool.pool
+        total = pool.total_tiles
+        free_frac = pool.free_tiles() / total if total else 1.0
+        frag = pool.fragmentation()
+        contig = self.pool.contiguity_report()["mean_contiguous_fraction"]
+        if free_frac > mc.free_low and frag < mc.frag_high and contig > mc.contig_low:
+            return
+        self._last_maintenance = self.clock
+        report = self.pool.compact(
+            max_moves=mc.max_moves, use_kernel=self.use_kernel
+        )
+        if report is not None and report.executed:
+            self.compaction_passes += 1
+            self.blocks_migrated += report.executed
+            self.maintenance_ns += report.total_ns
+
     # -- prefill --------------------------------------------------------------
     def _prefill(self, req: Request) -> bool:
         """Teacher-forced KV fill over ``prompt + out[:-1]`` — identical for
@@ -289,6 +340,8 @@ class ServeEngine:
                     ))
                 self._stall_steps = 0
                 return False
+            # stalled admission is exactly when defrag helps most
+            self._maybe_maintain()
             return True
         self._stall_steps = 0
 
@@ -339,6 +392,7 @@ class ServeEngine:
                     decoded=len(req.out),
                 ))
         self.steps += 1
+        self._maybe_maintain()
         return bool(self.live or self.queue)
 
     def run(self, max_steps: int = 10_000, raise_on_error: bool = True) -> List[Request]:
@@ -389,6 +443,9 @@ class ServeEngine:
             cancelled=float(len(self.cancelled)),
             preemptions=float(self.preemptions),
             injected_misses=float(self.pool.pool.stats.injected_misses),
+            maintenance_ns=float(self.maintenance_ns),
+            compaction_passes=float(self.compaction_passes),
+            blocks_migrated=float(self.blocks_migrated),
         )
         return rep
 

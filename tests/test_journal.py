@@ -1,0 +1,182 @@
+"""Crash-consistent allocator journaling (ISSUE 8): forced replay is
+bit-exact, crash truncation is deterministic, snapshots checkpoint the log,
+and tampered logs fail loudly."""
+import json
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.allocators import PhysicalMemory
+from repro.core.arena import TilePool
+from repro.core.dram import AddressMap, DramGeometry
+from repro.core.puma import PumaAllocator
+from repro.robustness import JournalReplayError, check_allocator, check_tile_pool
+from repro.robustness.journal import (
+    Journal,
+    allocator_digest,
+    kv_pool_digest,
+    pool_digest,
+    replay_allocator,
+    replay_kv_pool,
+    replay_pool,
+    snapshot_allocator,
+)
+
+pytestmark = pytest.mark.churn
+
+AMAP = AddressMap(
+    DramGeometry(channels=4, subarrays_per_bank=16, rows_per_subarray=32)
+)
+REGION = AMAP.region_bytes
+
+
+def _mem():
+    return PhysicalMemory(AMAP, seed=7, n_huge_pages=4)
+
+
+def _churned(journal, cycles=600, seed=42, compactions=True):
+    pa = PumaAllocator(_mem(), journal=journal)
+    pa.pim_preallocate(4)
+    total = pa.free_regions()
+    rng = random.Random(seed)
+    live = []
+    for cycle in range(cycles):
+        if live and (pa.free_regions() < total // 8 or rng.random() < 0.45):
+            pa.pim_free(live.pop(rng.randrange(len(live))))
+        else:
+            a = pa.pim_alloc(rng.randint(REGION // 2, 4 * REGION))
+            if a is not None:
+                live.append(a)
+        if compactions and cycle % 200 == 199:
+            from repro.robustness.compaction import compact_allocator
+
+            compact_allocator(pa)
+    return pa, live
+
+
+def test_allocator_replay_is_bit_exact():
+    j = Journal()
+    pa, live = _churned(j)
+    # free down to ~50 % so the blacklist remap has spare capacity
+    for a in live[len(live) // 2:]:
+        pa.pim_free(a)
+    del live[len(live) // 2:]
+    # a permanent-fault remap lands in the log too
+    sa = int(AMAP.region_subarrays(
+        np.asarray([live[0].extents[0].pa], np.int64))[0])
+    pa.blacklist_subarray(sa)
+    replayed = replay_allocator(j, _mem())
+    check_allocator(replayed).assert_ok()
+    assert allocator_digest(replayed) == allocator_digest(pa)
+    # replay restored the same translations, not just the same counters
+    for a in live[:8]:
+        r = replayed.lookup(a.va)
+        assert r is not None and [e.pa for e in r.extents] == [
+            e.pa for e in a.extents
+        ]
+
+
+def test_crash_mid_compaction_is_deterministic():
+    j = Journal()
+    _churned(j)
+    n = len(j.events)
+    # truncate at several points, including just before/after the last
+    # compact event (crash mid-maintenance)
+    compact_seqs = [
+        i for i, ev in enumerate(j.events) if ev.kind == "compact"
+    ]
+    cuts = {1, n // 3, n // 2, n - 1}
+    if compact_seqs:
+        cuts.update({compact_seqs[-1], compact_seqs[-1] + 1})
+    for keep in sorted(cuts):
+        crash = j.crash_copy(keep)
+        r1 = replay_allocator(crash, _mem())
+        r2 = replay_allocator(crash, _mem())
+        check_allocator(r1).assert_ok()
+        assert allocator_digest(r1) == allocator_digest(r2), keep
+
+
+def test_snapshot_checkpoints_the_log():
+    j = Journal()
+    pa, _ = _churned(j, cycles=300)
+    j.snapshot(snapshot_allocator(pa))
+    assert not j.events                 # WAL truncated at the checkpoint
+    # post-snapshot traffic replays on top of the installed base
+    a = pa.pim_alloc(2 * REGION)
+    assert a is not None
+    pa.pim_free(a)
+    replayed = replay_allocator(j, _mem())
+    assert allocator_digest(replayed) == allocator_digest(pa)
+
+
+def test_journal_json_roundtrip_and_tamper_detection():
+    j = Journal()
+    pa, _ = _churned(j, cycles=200, compactions=False)
+    j2 = Journal.from_json(j.to_json())
+    assert allocator_digest(replay_allocator(j2, _mem())) == \
+        allocator_digest(pa)
+    # tamper with an alloc outcome: forced replay must refuse, not guess
+    blob = json.loads(j.to_json())
+    for ev in blob["events"]:
+        if ev["kind"] == "alloc":
+            ev["regions"][0] ^= 0x4                     # bogus region PA
+            break
+    with pytest.raises(JournalReplayError):
+        replay_allocator(Journal.from_json(json.dumps(blob)), _mem())
+
+
+def test_tile_pool_replay_matches_live():
+    j = Journal()
+    pool = TilePool(8, 32, "puma", journal=j)
+    rng = random.Random(9)
+    live = []
+    for _ in range(800):
+        roll = rng.random()
+        if live and roll < 0.40:
+            pool.free(live.pop(rng.randrange(len(live))))
+        elif live and roll < 0.55:
+            pool.extend(rng.choice(live), 1)
+        else:
+            h = pool.alloc(rng.randint(1, 8))
+            if h is not None:
+                live.append(h)
+    from repro.robustness.compaction import compact_pool
+
+    compact_pool(pool)
+    check_tile_pool(pool).assert_ok()
+    replayed = replay_pool(j, n_arenas=8, tiles_per_arena=32, policy="puma")
+    assert pool_digest(replayed) == pool_digest(pool)
+
+
+def test_kv_pool_replay_matches_live():
+    from repro.core.kv_pool import KVPoolConfig, PagedKVPool
+
+    cfg = KVPoolConfig(num_blocks=64, block_size=4, kv_heads=2, head_dim=8,
+                       n_layers=1, max_seqs=8, max_blocks_per_seq=16,
+                       blocks_per_arena=16, policy="puma", dtype="float32")
+    j = Journal()
+    kv = PagedKVPool(cfg, journal=j)
+    rng = random.Random(13)
+    remaining = {}
+    for _ in range(500):
+        if (not remaining) or (rng.random() < 0.15 and kv._free_slots):
+            slot = kv.admit(rng.randint(2, 30))
+            if slot is not None:
+                remaining[slot] = rng.randint(1, 40)
+        else:
+            slot = rng.choice(sorted(remaining))
+            if rng.random() < 0.05:
+                forked = kv.fork(slot, copy_data=False)
+                if forked is not None:
+                    remaining[forked] = remaining[slot]
+            if kv.append_token(slot):
+                remaining[slot] -= 1
+            else:
+                remaining[slot] = 0
+            if remaining[slot] <= 0:
+                del remaining[slot]
+                kv.release(slot)
+    kv.compact()
+    replayed = replay_kv_pool(j, cfg)
+    assert kv_pool_digest(replayed) == kv_pool_digest(kv)
