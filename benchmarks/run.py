@@ -16,6 +16,9 @@ aggregator that folds every persisted ``BENCH_*.json`` into one summary.
   * churn_bench     — long-horizon aging: executable-fraction decay per
                       allocator + watermark compaction recovery + journal
                       crash/replay (persists BENCH_churn.json)
+  * serve_bench     — open-loop serving load scenarios through ServeEngine
+                      (traffic generators + tenant mixes; persists
+                      BENCH_serve.json)
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--smoke`` shrinks the
 persisted microbenchmarks for CI; ``--only translate`` runs just one
@@ -101,6 +104,7 @@ def main() -> None:
             kv_pool_bench,
             microbench,
             roofline_report,
+            serve_bench,
             translate_bench,
         )
 
@@ -120,6 +124,7 @@ def main() -> None:
             "channels": lambda: channel_bench.run(emit, smoke=args.smoke),
             "chaos": lambda: chaos_bench.run(emit, smoke=args.smoke),
             "churn": lambda: churn_bench.run(emit, smoke=args.smoke),
+            "serve": lambda: serve_bench.run(emit, smoke=args.smoke),
         }
         selected = {
             name: fn

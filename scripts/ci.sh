@@ -2,9 +2,11 @@
 # Lightweight CI: tier-1 test suite + the persisted microbenchmarks in
 # smoke mode (BENCH_translate.json and BENCH_channels.json for the perf
 # trajectory), each gated on its speedup floors, plus the fixed-seed
-# chaos gate (fault-injection suite + BENCH_faults.json assertions) and
-# the fixed-seed churn gate (long-horizon aging suite + compaction
-# recovery / journal-replay assertions on BENCH_churn.json).
+# chaos gate (fault-injection suite + BENCH_faults.json assertions), the
+# fixed-seed churn gate (long-horizon aging suite + compaction recovery /
+# journal-replay assertions on BENCH_churn.json), and the fixed-seed
+# serve gate (load-harness suite + scenario-shape assertions on
+# BENCH_serve.json, with a byte-identical rerun check).
 #
 #   bash scripts/ci.sh
 set -euo pipefail
@@ -124,4 +126,51 @@ gate("serving trace", s["bit_exact"] is True
      f"{len(s['compactions'])} watermark passes")
 raise SystemExit(1 if fails else 0)
 EOG
+
+echo "== serve suite (fixed-seed load gate) =="
+python -m pytest -m serve -q
+
+echo "== serve load benchmark (smoke, gated) =="
+PYTHONPATH="src:." python benchmarks/serve_bench.py --smoke --gate
+
+echo "== BENCH_serve.json =="
+python - <<'EOS'
+import json
+rec = json.load(open("BENCH_serve.json"))
+fails = []
+def gate(name, cond, detail):
+    print(f"  {'ok' if cond else 'FAIL'}: {name} ({detail})")
+    if not cond:
+        fails.append(name)
+
+scenarios = ("steady", "bursty", "long_context", "multi_tenant",
+             "cancel_heavy")
+gate("scenarios present", all(f"scenario/{n}" in rec for n in scenarios),
+     f"{sum(1 for n in scenarios if f'scenario/{n}' in rec)}/5")
+# a rerun from the same seeds must be byte-identical
+gate("determinism", rec["determinism"]["identical"] is True,
+     f"{rec['determinism']['reruns']} passes identical")
+for n in scenarios:
+    s = rec[f"scenario/{n}"]
+    gate(f"{n} ledger", s["conservation_ok"] is True,
+         f"{s['done']}+{s['rejected']}+{s['cancelled']}=={s['submitted']}")
+    gate(f"{n} progress", s["done"] > 0 and s["tokens_per_s"] > 0,
+         f"{s['done']} done, {s['tokens_per_s']:.0f} tok/s")
+    gate(f"{n} latency", s["p50_complete_steps"] <= s["p99_complete_steps"],
+         f"p50={s['p50_complete_steps']} p99={s['p99_complete_steps']}")
+    gate(f"{n} contiguity", 0.0 < s["contiguity"] <= 1.0,
+         f"PUD-executable analogue {s['contiguity']:.3f}")
+b, st = rec["scenario/bursty"], rec["scenario/steady"]
+gate("bursty queues deeper", b["queue_depth_peak"] > st["queue_depth_peak"],
+     f"{b['queue_depth_peak']} vs {st['queue_depth_peak']}")
+gate("bursty preempts", b["preemptions"] > 0,
+     f"{b['preemptions']} preemptions (recompute-on-resume exercised)")
+gate("cancellations fire", rec["scenario/cancel_heavy"]["cancelled"] > 0,
+     f"{rec['scenario/cancel_heavy']['cancelled']} cancelled")
+mt = rec["scenario/multi_tenant"]
+gate("tenant mix", mt["channels"] == 2
+     and sum(1 for v in mt["done_by_tenant"].values() if v > 0) >= 2,
+     f"{mt['channels']} channels, done_by_tenant={mt['done_by_tenant']}")
+raise SystemExit(1 if fails else 0)
+EOS
 echo "CI OK"

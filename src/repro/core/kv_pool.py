@@ -273,6 +273,21 @@ class PagedKVPool:
         self.k = self.k.at[layer, block, off].set(k1.astype(self.k.dtype))
         self.v = self.v.at[layer, block, off].set(v1.astype(self.v.dtype))
 
+    def occupancy(self) -> Dict[str, float]:
+        """Point-in-time pool occupancy sample (all floats, JSON-friendly):
+        tile counts, used fraction, and sequence-slot pressure.  The serving
+        load harness samples this every engine step via ``step_hooks``."""
+        total = self.pool.total_tiles
+        free = self.pool.free_tiles()
+        return {
+            "total_tiles": float(total),
+            "free_tiles": float(free),
+            "used_tiles": float(total - free),
+            "used_fraction": (total - free) / total if total else 0.0,
+            "live_seqs": float(len(self._seqs)),
+            "free_slots": float(len(self._free_slots)),
+        }
+
     # -- PUMA metric --------------------------------------------------------------
     def contiguity_report(self) -> Dict[str, float]:
         """Pool-wide contiguous-run statistics (the paper's '% in PUD'

@@ -8,6 +8,7 @@ errors`` acyclic, ``invariants`` is loaded lazily via ``__getattr__``.
 """
 from repro.robustness.errors import (  # noqa: F401
     BasePageExhausted,
+    ClientCancelled,
     DeadlineExceeded,
     DoubleFree,
     EngineStalled,
@@ -41,7 +42,7 @@ __all__ = [
     "PumaError", "PumaAllocError", "PoolExhausted", "HugePageExhausted",
     "BasePageExhausted", "TilePoolExhausted", "DoubleFree",
     "TranslationError", "PudExecError", "RowCloneFault", "RequestRejected",
-    "DeadlineExceeded", "EngineStalled", "InvariantViolation",
+    "DeadlineExceeded", "ClientCancelled", "EngineStalled", "InvariantViolation",
     "JournalReplayError",
     "FaultPlan", "FaultStats", "FaultInjector",
     *_LAZY_INVARIANTS, *_LAZY_JOURNAL, *_LAZY_COMPACTION,

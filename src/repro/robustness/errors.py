@@ -46,6 +46,7 @@ __all__ = [
     "RowCloneFault",
     "RequestRejected",
     "DeadlineExceeded",
+    "ClientCancelled",
     "EngineStalled",
     "InvariantViolation",
     "JournalReplayError",
@@ -146,6 +147,11 @@ class RequestRejected(PumaError):
 
 class DeadlineExceeded(RequestRejected):
     """A request's per-request deadline elapsed before completion."""
+
+
+class ClientCancelled(RequestRejected):
+    """The client withdrew the request (``ServeEngine.cancel``) before it
+    completed — early cancellation, not an engine-side failure."""
 
 
 class EngineStalled(PumaError):

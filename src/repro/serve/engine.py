@@ -40,6 +40,12 @@ Metrics surface the paper's figure of merit: block-table contiguity (the
 the pool stripes each request's blocks round-robin across memory channels,
 and ``metrics()``/``channel_occupancy()`` additionally report per-channel
 block occupancy and its load balance.
+
+Open-loop load support (:mod:`repro.serve.loadgen` is the consumer):
+``cancel(rid)`` is client-side early cancellation, ``step_hooks`` receive a
+:meth:`ServeEngine.step_sample` after every step, and ``run_for`` /
+``drain`` slice engine time so a traffic driver can interleave arrivals
+with bounded stepping instead of handing over the whole loop.
 """
 from __future__ import annotations
 
@@ -53,8 +59,13 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.kv_pool import KVPoolConfig, PagedKVPool
-from repro.robustness import DeadlineExceeded, EngineStalled, RequestRejected
-from repro.serve.paged_runner import paged_decode_step
+from repro.robustness import (
+    ClientCancelled,
+    DeadlineExceeded,
+    EngineStalled,
+    RequestRejected,
+)
+from repro.serve.paged_runner import paged_decode_step, paged_decode_step_jit
 
 if TYPE_CHECKING:
     from repro.robustness.faults import FaultInjector
@@ -94,6 +105,8 @@ class Request:
     status: str = "queued"                 # queued|running|done|rejected|cancelled
     submit_clock: int = 0
     admit_clock: int = -1
+    finish_clock: int = -1                 # clock at done/rejected/cancelled
+    tenant: Optional[str] = None           # traffic class (loadgen bookkeeping)
     preemptions: int = 0
     error: Optional[Exception] = None
 
@@ -113,6 +126,8 @@ class ServeEngine:
         pool_cfg: KVPoolConfig,
         *,
         use_kernel: bool = False,   # pallas-interpret is slow on CPU; jnp ref default
+        jit: bool = True,           # compile prefill/decode per shape (load-
+                                    # harness scale needs it; False = eager)
         eos_id: Optional[int] = None,
         injector: Optional["FaultInjector"] = None,
         admission_lookahead: int = 8,
@@ -127,6 +142,21 @@ class ServeEngine:
         self.params = params
         self.pool = PagedKVPool(pool_cfg, injector=injector)
         self.use_kernel = use_kernel
+        self.jit = jit
+        if jit:
+            # cache the jitted prefill step ON the model so every engine
+            # over the same model shares one XLA cache (scenario reruns
+            # compile nothing); the paged step's shared wrapper lives in
+            # paged_runner for the same reason.
+            fn = getattr(model, "_jit_decode_step", None)
+            if fn is None:
+                fn = jax.jit(model.decode_step)
+                model._jit_decode_step = fn
+            self._decode_step = fn
+            self._paged_step = paged_decode_step_jit
+        else:
+            self._decode_step = model.decode_step
+            self._paged_step = paged_decode_step
         self.eos_id = eos_id
         self.admission_lookahead = max(1, admission_lookahead)
         self.stall_patience = max(1, stall_patience)
@@ -138,9 +168,14 @@ class ServeEngine:
         self.steps = 0                          # decode steps (batch advanced)
         self.clock = 0                          # every step() call, incl. stalls
         self.tokens_decoded = 0
+        self.tokens_prefilled = 0               # teacher-forced KV-fill tokens
         self.preemptions = 0
         self.submitted = 0
         self._stall_steps = 0
+        #: step-level metric hooks: each callable gets ``(engine, sample)``
+        #: after every :meth:`step`, where ``sample`` is :meth:`step_sample`.
+        #: The load harness registers its occupancy/queue-depth sampler here.
+        self.step_hooks: List = []
         # background maintenance (watermark-triggered compaction)
         self.maintenance = maintenance
         self.maintenance_ns = 0.0
@@ -169,18 +204,46 @@ class ServeEngine:
             return
         req.status = "rejected"
         req.error = err
+        req.finish_clock = self.clock
         self.rejected.append(req)
         raise err
+
+    def cancel(self, rid: int) -> bool:
+        """Client-side early cancellation: drop ``rid`` from the queue or the
+        live batch (releasing its KV blocks).  Returns False when the request
+        is not in flight (already done / rejected / cancelled / unknown) —
+        cancelling twice is a harmless no-op, like closing a dead socket."""
+        for i, req in enumerate(self.queue):
+            if req.rid == rid:
+                del self.queue[i]
+                self._cancel(req, ClientCancelled(
+                    "cancelled by client while queued", rid=rid,
+                    waited=self.clock - req.submit_clock,
+                ))
+                return True
+        for slot, req in list(self.live.items()):
+            if req.rid == rid:
+                del self.live[slot]
+                self.pool.release(slot)
+                req.slot = None
+                self._cancel(req, ClientCancelled(
+                    "cancelled by client mid-decode", rid=rid,
+                    decoded=len(req.out),
+                ))
+                return True
+        return False
 
     # -- degraded-mode bookkeeping --------------------------------------------
     def _reject(self, req: Request, err: RequestRejected) -> None:
         req.status = "rejected"
         req.error = err
+        req.finish_clock = self.clock
         self.rejected.append(req)
 
     def _cancel(self, req: Request, err: Exception) -> None:
         req.status = "cancelled"
         req.error = err
+        req.finish_clock = self.clock
         self.cancelled.append(req)
 
     def _sweep_deadlines(self) -> None:
@@ -225,19 +288,27 @@ class ServeEngine:
         self.preemptions += 1
         self.queue.appendleft(req)   # resume first: it already holds progress
 
-    def _append_with_recovery(self, slot: int) -> bool:
+    def _append_with_recovery(self, slot: int, *, allow_preempt: bool = True) -> bool:
         """`append_token` with transient-fault retries and preemption.
 
         Transient injected misses are retried (fresh fault draw each time);
         true exhaustion preempts the youngest *other* sequence and retries.
         Returns False only when the pool genuinely cannot host one more
         block for this sequence.
+
+        ``allow_preempt=False`` is the admission-time mode: a sequence that
+        is only being *prefilled* must never evict sequences holding decode
+        progress — two near-full requests would otherwise evict each other
+        forever inside one step (admit A, A's growth block preempts B, B
+        lands back at the queue head, B is admitted and preempts A, ...).
         """
         for _ in range(3):
             if self.pool.append_token(slot):
                 return True
             if self.pool.pool.free_tiles() > 0:
                 continue                      # injected transient miss
+            if not allow_preempt:
+                return False
             victim = self._pick_victim(exclude=slot)
             if victim is None:
                 return False
@@ -279,15 +350,19 @@ class ServeEngine:
         pos = jnp.arange(S, dtype=jnp.int32)[None]
         cache = self.model.init_cache(1, S, recent_size=S)
         batch = {"tokens": toks, "positions": pos}
-        logits, cache = self.model.decode_step(self.params, batch, cache)
+        logits, cache = self._decode_step(self.params, batch, cache)
+        self.tokens_prefilled += S
         # prompt KV lands in the recent ring (split cache, len_main == 0)
         k, v = cache["layers"]["recent"]            # (L, 1, S, KV, hd)
         for li in range(cfg.n_layers):
             self.pool.write_prompt_kv(req.slot, li, k[li, 0, :S], v[li, 0, :S])
         if not req.out:
             req.out.append(int(jnp.argmax(logits[0])))
-        # account the pending token: it becomes the next decode input
-        if not self._append_with_recovery(req.slot):
+        # account the pending token: it becomes the next decode input.
+        # allow_preempt=False — admission must never evict decode progress
+        # (see _append_with_recovery); the admission gate below makes this
+        # failure genuinely pathological (faults / per-seq block ceiling).
+        if not self._append_with_recovery(req.slot, allow_preempt=False):
             slot = req.slot
             self.pool.release(slot)
             del self.live[slot]
@@ -300,7 +375,20 @@ class ServeEngine:
 
     # -- one engine step ---------------------------------------------------------
     def step(self) -> bool:
-        """Admit + decode one token for all live seqs. False when idle."""
+        """Admit + decode one token for all live seqs. False when idle.
+
+        After the step, every registered ``step_hooks`` callable receives
+        ``(engine, step_sample())`` — the open-loop load harness samples
+        occupancy / queue depth / degraded-mode counters this way without
+        the engine knowing about any particular consumer."""
+        alive = self._step()
+        if self.step_hooks:
+            sample = self.step_sample()
+            for hook in self.step_hooks:
+                hook(self, sample)
+        return alive
+
+    def _step(self) -> bool:
         self.clock += 1
         self._sweep_deadlines()
 
@@ -312,6 +400,16 @@ class ServeEngine:
             req = self.queue[idx]
             slot = self.pool.admit(req.ctx_tokens())
             if slot is None:
+                idx += 1
+                scanned += 1
+                continue
+            # prefill appends the sampled token immediately: if that needs a
+            # growth block the pool doesn't have, admitting now would either
+            # reject the request or evict running work — leave it queued.
+            if (self.pool.pool.free_tiles() == 0
+                    and self.pool.blocks_for(req.ctx_tokens() + 1)
+                    > self.pool.blocks_for(req.ctx_tokens())):
+                self.pool.release(slot)
                 idx += 1
                 scanned += 1
                 continue
@@ -355,7 +453,7 @@ class ServeEngine:
         tbl = jnp.asarray(tbl_full[slots])
         lens = jnp.asarray(lens_full[slots])
 
-        logits, new_k, new_v = paged_decode_step(
+        logits, new_k, new_v = self._paged_step(
             self.params, cfg,
             jnp.asarray(tokens), jnp.asarray(positions),
             self.pool.k, self.pool.v, tbl, lens,
@@ -382,6 +480,7 @@ class ServeEngine:
                 del self.live[slot]
                 req.slot = None
                 req.status = "done"
+                req.finish_clock = self.clock
                 self.done.append(req)
             elif not self._append_with_recovery(slot):
                 self.pool.release(slot)
@@ -395,10 +494,30 @@ class ServeEngine:
         self._maybe_maintain()
         return bool(self.live or self.queue)
 
-    def run(self, max_steps: int = 10_000, raise_on_error: bool = True) -> List[Request]:
+    def drain(self, max_steps: int = 10_000) -> List[Request]:
+        """Step until idle without raising — the open-loop load harness ends
+        a scenario with this (rejections/cancellations stay recorded in the
+        ledger rather than aborting the run)."""
         for _ in range(max_steps):
             if not self.step():
                 break
+        return self.done
+
+    def run_for(self, n_steps: int) -> bool:
+        """Time-sliced run: advance at most ``n_steps`` engine ticks.
+
+        Returns the last ``step()`` result (False = engine went idle), so an
+        open-loop driver can interleave arrival submission with bounded
+        slices of engine time instead of handing over the whole loop."""
+        alive = True
+        for _ in range(max(0, n_steps)):
+            alive = self.step()
+            if not alive:
+                break
+        return alive
+
+    def run(self, max_steps: int = 10_000, raise_on_error: bool = True) -> List[Request]:
+        self.drain(max_steps)
         if raise_on_error:
             if self.queue or self.live:
                 raise EngineStalled(
@@ -431,11 +550,43 @@ class ServeEngine:
             "preemptions": self.preemptions,
         }
 
+    def step_sample(self) -> Dict[str, float]:
+        """One step-granular metric sample (what ``step_hooks`` receive):
+        queue/batch depth, pool occupancy, live block-table contiguity (the
+        paper's PUD-executable-fraction analogue — meaningful only while
+        sequences are live, hence sampled here rather than post-drain), and
+        the degraded-mode counters.  All floats."""
+        occ = self.pool.occupancy()
+        rep = self.pool.contiguity_report()
+        return {
+            "contiguity": rep["mean_contiguous_fraction"],
+            "descriptors_per_tile": rep["descriptors_per_tile"],
+            "channel_balance": rep["channel_balance"],
+            "clock": float(self.clock),
+            "steps": float(self.steps),
+            "live": float(len(self.live)),
+            "queued": float(len(self.queue)),
+            "free_tiles": occ["free_tiles"],
+            "used_fraction": occ["used_fraction"],
+            "tokens_decoded": float(self.tokens_decoded),
+            "tokens_prefilled": float(self.tokens_prefilled),
+            "done": float(len(self.done)),
+            "rejected": float(len(self.rejected)),
+            "cancelled": float(len(self.cancelled)),
+            "preemptions": float(self.preemptions),
+        }
+
     def metrics(self) -> Dict[str, float]:
         rep = self.pool.contiguity_report()
         rep.update(
+            clock=float(self.clock),
             steps=float(self.steps),
             tokens=float(self.tokens_decoded),
+            tokens_prefilled=float(self.tokens_prefilled),
+            submitted=float(self.submitted),
+            done=float(len(self.done)),
+            queue_depth=float(len(self.queue)),
+            used_fraction=self.pool.occupancy()["used_fraction"],
             frag=self.pool.pool.fragmentation(),
             align_hits=float(self.pool.pool.stats.align_hits),
             align_misses=float(self.pool.pool.stats.align_misses),

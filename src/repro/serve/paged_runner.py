@@ -24,6 +24,8 @@ from repro.models import layers as L
 from repro.models import moe as MOE
 from repro.models.rope import apply_rope
 
+__all__ = ["paged_decode_step", "paged_decode_step_jit"]
+
 
 def paged_decode_step(
     params,
@@ -142,3 +144,12 @@ def _paged_lse(q, k_pool, block_tables, seq_lens, scale):
     pos = jnp.arange(s.shape[-1])[None, None, None, :]
     s = jnp.where(pos < seq_lens[:, None, None, None], s, -jnp.inf)
     return jax.nn.logsumexp(s, axis=-1)                    # (B, KV, group)
+
+
+#: process-wide jitted variant (cfg and use_kernel are static): the serving
+#: engine's decode hot path.  One shared wrapper — not one per engine — so
+#: the XLA cache survives across scenario/engine instances and a load run
+#: compiles each (batch, pool) shape exactly once.
+paged_decode_step_jit = jax.jit(
+    paged_decode_step, static_argnums=(1,), static_argnames=("use_kernel",)
+)

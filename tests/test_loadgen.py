@@ -1,0 +1,182 @@
+"""Traffic-generator unit tests (ISSUE 9): all model-free and fast.
+
+The serving benchmark's credibility rests on the streams being exactly
+reproducible from their seeds, so most of these tests are determinism and
+shape checks on :mod:`repro.serve.loadgen` — no JAX, no engine.
+"""
+import dataclasses
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.serve.loadgen import (
+    SCENARIO_NAMES,
+    ArrivalSpec,
+    RequestSpec,
+    SimCost,
+    TenantSpec,
+    build_scenario,
+    tenant_from_arch,
+)
+
+KINDS = ("steady", "poisson", "bursty")
+
+
+# ---------------------------------------------------------------------------
+# arrival processes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_arrivals_are_monotone_integer_ticks(kind):
+    spec = ArrivalSpec(kind)
+    ticks = spec.arrivals(np.random.default_rng(7), 200)
+    assert len(ticks) == 200
+    assert all(isinstance(t, int) for t in ticks)
+    assert ticks[0] >= 0
+    assert all(b >= a for a, b in zip(ticks, ticks[1:]))
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_arrivals_deterministic_in_seed(kind):
+    spec = ArrivalSpec(kind)
+    a = spec.arrivals(np.random.default_rng(123), 100)
+    b = spec.arrivals(np.random.default_rng(123), 100)
+    c = spec.arrivals(np.random.default_rng(124), 100)
+    assert a == b
+    if kind != "steady":          # steady is seed-independent by design
+        assert a != c
+
+
+def test_steady_arrivals_closed_form():
+    spec = ArrivalSpec("steady", rate=0.5)
+    assert spec.arrivals(np.random.default_rng(0), 6) == [0, 2, 4, 6, 8, 10]
+
+
+def test_bursty_arrivals_cluster():
+    spec = ArrivalSpec("bursty", burst_size=8, burst_gap=24.0)
+    ticks = spec.arrivals(np.random.default_rng(902), 32)
+    # full bursts land on a single tick, and gaps separate the clusters
+    assert ticks[:8] == [ticks[0]] * 8
+    assert ticks[8] > ticks[7]
+    assert len(set(ticks)) == 4   # 32 requests / burst_size 8
+
+
+def test_empty_and_unknown_arrivals():
+    assert ArrivalSpec("poisson").arrivals(np.random.default_rng(0), 0) == []
+    with pytest.raises(ValueError, match="unknown arrival kind"):
+        ArrivalSpec("zipf").arrivals(np.random.default_rng(0), 4)
+
+
+# ---------------------------------------------------------------------------
+# tenants
+# ---------------------------------------------------------------------------
+
+def test_tenant_from_arch_is_deterministic_and_capped():
+    a = tenant_from_arch("stablelm_1_6b", cap_tokens=40)
+    b = tenant_from_arch("stablelm_1_6b", cap_tokens=40)
+    assert a == b
+    assert all(p <= 40 for p in a.prompt_lens)
+    assert a.prompt_lens == tuple(sorted(a.prompt_lens))
+
+
+def test_tenant_from_arch_monotone_in_model_scale():
+    small = tenant_from_arch("stablelm_1_6b", cap_tokens=512)
+    big = tenant_from_arch("granite_34b", cap_tokens=512)
+    assert max(big.prompt_lens) > max(small.prompt_lens)
+    assert max(big.max_new_lens) >= max(small.max_new_lens)
+
+
+def test_request_spec_round_trips_into_engine_request():
+    spec = RequestSpec(rid=9, arrive_step=3, tenant="t", prompt=(1, 2, 3),
+                       max_new=4, deadline_steps=20, cancel_after=2)
+    req = spec.to_request()
+    assert (req.rid, req.prompt, req.max_new) == (9, [1, 2, 3], 4)
+    assert req.deadline_steps == 20
+    assert req.tenant == "t"
+
+
+# ---------------------------------------------------------------------------
+# scenario registry
+# ---------------------------------------------------------------------------
+
+def test_registry_covers_the_five_scenarios():
+    assert len(SCENARIO_NAMES) == 5
+    seeds = set()
+    for name in SCENARIO_NAMES:
+        sc = build_scenario(name, smoke=True)
+        assert sc.name == name
+        seeds.add(sc.seed)
+        assert sc.pool_overrides() == dict(sc.pool)
+    assert len(seeds) == 5        # every scenario owns its seed
+    with pytest.raises(ValueError, match="unknown scenario"):
+        build_scenario("nope")
+
+
+@pytest.mark.parametrize("name", SCENARIO_NAMES)
+def test_generated_streams_are_reproducible(name):
+    sc = build_scenario(name, smoke=True)
+    assert sc.generate() == sc.generate()
+    assert all(
+        b.arrive_step >= a.arrive_step
+        for a, b in zip(sc.generate(), sc.generate()[1:])
+    )
+
+
+def test_smoke_shrinks_requests_but_keeps_the_seed():
+    full = build_scenario("bursty")
+    smoke = build_scenario("bursty", smoke=True)
+    assert full.seed == smoke.seed
+    assert full.n_requests > smoke.n_requests
+    # the smaller stream is a prefix-compatible draw: same tenants, same pools
+    assert full.tenants == smoke.tenants
+    assert full.pool == smoke.pool
+
+
+def test_multi_tenant_mix_draws_every_registry_tenant():
+    sc = build_scenario("multi_tenant", smoke=False)
+    specs = sc.generate()
+    by_tenant = {t.name: 0 for t in sc.tenants}
+    for s in specs:
+        by_tenant[s.tenant] += 1
+    assert all(v > 0 for v in by_tenant.values())
+    # weights 3:2:1 show up in the draw ordering
+    assert by_tenant["stablelm_1_6b"] > by_tenant["granite_34b"]
+
+
+def test_cancel_heavy_stream_carries_cancel_and_deadline_fields():
+    sc = build_scenario("cancel_heavy", smoke=False)
+    specs = sc.generate()
+    impatient = [s for s in specs if s.tenant == "impatient"]
+    deadline = [s for s in specs if s.tenant == "deadline"]
+    cancels = [s.cancel_after for s in impatient if s.cancel_after is not None]
+    assert cancels and all(1 <= c <= 4 for c in cancels)
+    frac = len(cancels) / len(impatient)
+    assert 0.25 < frac < 0.65     # ~45% cancel rate
+    assert deadline and all(s.deadline_steps == 6 for s in deadline)
+    assert all(s.cancel_after is None for s in deadline)
+
+
+def test_prompt_lengths_come_from_the_tenant_buckets():
+    for name in SCENARIO_NAMES:
+        sc = build_scenario(name, smoke=True)
+        buckets = {t.name: set(t.prompt_lens) for t in sc.tenants}
+        for s in sc.generate():
+            assert len(s.prompt) in buckets[s.tenant], (name, s.rid)
+
+
+# ---------------------------------------------------------------------------
+# deterministic serving-time model
+# ---------------------------------------------------------------------------
+
+def test_simcost_is_linear_in_the_engine_counters():
+    cost = SimCost(step_overhead_ns=10.0, decode_token_ns=2.0,
+                   prefill_token_ns=1.0)
+    eng = SimpleNamespace(clock=5, tokens_decoded=7, tokens_prefilled=11,
+                          maintenance_ns=13.0)
+    assert cost.total_ns(eng) == 10.0 * 5 + 2.0 * 7 + 1.0 * 11 + 13.0
+    assert dataclasses.asdict(SimCost()) == {
+        "step_overhead_ns": 2_000.0,
+        "decode_token_ns": 500.0,
+        "prefill_token_ns": 150.0,
+    }

@@ -150,3 +150,55 @@ def test_preemption_resumes_with_bit_exact_recompute(model_and_params):
         assert req.out == ref, (req.rid, req.preemptions)
     check_engine(eng).assert_ok()
     assert eng.pool.pool.free_tiles() == eng.pool.pool.total_tiles
+
+
+def hyp_seeds(func):
+    """Drive ``func(..., seed=...)`` with hypothesis when installed; fall
+    back to fixed seeds otherwise (same contract as the churn suite)."""
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        return pytest.mark.parametrize("seed", [0xC0FFEE, 0xBADF00D])(func)
+    return settings(max_examples=2, deadline=None)(
+        given(seed=st.integers(0, 2**32 - 1))(func)
+    )
+
+
+@hyp_seeds
+def test_contended_run_matches_uncontended_bit_exactly(model_and_params, seed):
+    """Property (ISSUE 9 satellite): whatever preemption/recompute churn a
+    starved pool inflicts, every request decodes the exact tokens it would
+    have produced alone on a roomy pool — placement is invisible to the
+    math."""
+    model, params = model_and_params
+    cfg = model.cfg
+    rng = np.random.default_rng(seed)
+    reqs = [
+        (int(rng.integers(8, 13)), list(rng.integers(0, 64, int(n))))
+        for n in rng.integers(8, 13, size=3)
+        for _ in [0]
+    ]
+    reqs = [(len(p), p) for _, p in reqs]
+
+    def run(pool_kw):
+        eng = ServeEngine(
+            model, params, _pool_cfg(cfg, **pool_kw), use_kernel=False,
+        )
+        for i, (_, p) in enumerate(reqs):
+            eng.submit(Request(rid=i, prompt=list(p), max_new=10))
+        done = eng.run()
+        check_engine(eng).assert_ok()
+        assert eng.pool.pool.free_tiles() == eng.pool.pool.total_tiles
+        return eng, {r.rid: list(r.out) for r in done}
+
+    # starved: 8 blocks x 4 tokens; any two live seqs (>=18 tokens each by
+    # construction) overflow the pool mid-decode, forcing preempt+recompute
+    contended, out_c = run(dict(num_blocks=8, block_size=4, max_seqs=2,
+                                blocks_per_arena=8, max_blocks_per_seq=8))
+    # roomy: 4x the blocks, every sequence fits untouched
+    uncontended, out_u = run(dict(num_blocks=32, block_size=4, max_seqs=4,
+                                  blocks_per_arena=8, max_blocks_per_seq=8))
+    assert contended.preemptions >= 1
+    assert uncontended.preemptions == 0
+    assert set(out_c) == set(out_u) == {0, 1, 2}
+    assert out_c == out_u
