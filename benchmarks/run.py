@@ -19,6 +19,9 @@ aggregator that folds every persisted ``BENCH_*.json`` into one summary.
   * serve_bench     — open-loop serving load scenarios through ServeEngine
                       (traffic generators + tenant mixes; persists
                       BENCH_serve.json)
+  * trace_bench     — GEMV/MoE decode offload fractions per allocator +
+                      channel-striped makespan + serve-trace replay verdict
+                      (persists BENCH_trace.json)
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--smoke`` shrinks the
 persisted microbenchmarks for CI; ``--only translate`` runs just one
@@ -105,6 +108,7 @@ def main() -> None:
             microbench,
             roofline_report,
             serve_bench,
+            trace_bench,
             translate_bench,
         )
 
@@ -125,6 +129,7 @@ def main() -> None:
             "chaos": lambda: chaos_bench.run(emit, smoke=args.smoke),
             "churn": lambda: churn_bench.run(emit, smoke=args.smoke),
             "serve": lambda: serve_bench.run(emit, smoke=args.smoke),
+            "trace": lambda: trace_bench.run(emit, smoke=args.smoke),
         }
         selected = {
             name: fn

@@ -6,11 +6,18 @@
 # fixed-seed churn gate (long-horizon aging suite + compaction recovery /
 # journal-replay assertions on BENCH_churn.json), and the fixed-seed
 # serve gate (load-harness suite + scenario-shape assertions on
-# BENCH_serve.json, with a byte-identical rerun check).
+# BENCH_serve.json, with a byte-identical rerun check), and the fixed-seed
+# trace gate (recorder/replay/golden suite + GEMV-offload assertions on
+# BENCH_trace.json).
 #
-#   bash scripts/ci.sh
+#   bash scripts/ci.sh          # smoke lanes (default)
+#   bash scripts/ci.sh --full   # + full-size lane: -m slow tests and the
+#                               # ~1800-request serve_bench trajectory
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+FULL=0
+[[ "${1:-}" == "--full" ]] && FULL=1
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
@@ -173,4 +180,62 @@ gate("tenant mix", mt["channels"] == 2
      f"{mt['channels']} channels, done_by_tenant={mt['done_by_tenant']}")
 raise SystemExit(1 if fails else 0)
 EOS
+
+echo "== trace suite (golden-trace + replay gate) =="
+python -m pytest -m trace -q
+
+echo "== trace benchmark (smoke, gated) =="
+PYTHONPATH="src:." python benchmarks/trace_bench.py --smoke --gate
+
+echo "== BENCH_trace.json =="
+python - <<'EOT'
+import json
+rec = json.load(open("BENCH_trace.json"))
+fails = []
+def gate(name, cond, detail):
+    print(f"  {'ok' if cond else 'FAIL'}: {name} ({detail})")
+    if not cond:
+        fails.append(name)
+
+# the trace bench regenerated everything twice: must be byte-identical
+gate("determinism", rec["determinism"]["identical"] is True,
+     f"{rec['determinism']['reruns']} passes identical")
+archs = rec["config"]["archs"]
+gate("coverage", len(archs) >= 3 and len(rec["config"]["allocators"]) == 4,
+     f"{len(archs)} archs x {len(rec['config']['allocators'])} allocators")
+for arch in archs:
+    f = {al: rec[f"offload/{arch}/{al}"]["offload_fraction"]
+         for al in ("malloc", "posix_memalign", "hugepage", "puma")}
+    # the paper's allocator story at decode-step granularity: standard
+    # interfaces offload ~nothing, hugepages partially, PUMA ~everything
+    gate(f"{arch} malloc/posix offload ~0",
+         f["malloc"] == 0.0 and f["posix_memalign"] == 0.0,
+         f"malloc={f['malloc']} posix={f['posix_memalign']}")
+    gate(f"{arch} hugepage partial", 0.0 < f["hugepage"] < 0.95,
+         f"hugepage={f['hugepage']:.3f}")
+    gate(f"{arch} puma strictly highest",
+         f["puma"] >= 0.99 and all(f["puma"] > f[a] for a in
+                                   ("malloc", "posix_memalign", "hugepage")),
+         f"puma={f['puma']:.3f} > hugepage={f['hugepage']:.3f}")
+    sp = rec[f"offload/{arch}/puma"]["speedup_vs_cpu"]
+    gate(f"{arch} puma decode speedup", sp >= 1.5,
+         f"{sp:.2f}x vs CPU-only decode")
+    ch = rec[f"channel/{arch}"]
+    gate(f"{arch} channel parallelism", ch["parallel_speedup"] >= 2.0,
+         f"{ch['parallel_speedup']:.2f}x over serial at "
+         f"{ch['channels']} channels")
+sv = rec["serve/steady_trace"]
+gate("serve trace replays bit-exact",
+     sv["replay_ok"] is True and sv["replay_mismatches"] == 0,
+     f"{sv['events']} events, sim_ns={sv['sim_ns']}")
+raise SystemExit(1 if fails else 0)
+EOT
+
+if [[ "$FULL" == "1" ]]; then
+  echo "== full-size lane: slow suite =="
+  python -m pytest -m slow -q
+
+  echo "== full-size lane: serve load benchmark (full, gated) =="
+  PYTHONPATH="src:." python benchmarks/serve_bench.py --gate
+fi
 echo "CI OK"

@@ -37,6 +37,21 @@ def lm_archs() -> List[str]:
     return [a for a in ARCHS if a != "puma_paper"]
 
 
+#: the registry models the trace/offload benchmark prices a decode step for
+#: (one small dense, one MoE — exercising expert dispatch — one GQA dense);
+#: the ISSUE-10 coverage floor is "≥3 registry models x 4 allocators".
+TRACE_ARCHS: List[str] = [
+    "stablelm_1_6b",
+    "granite_moe_1b_a400m",
+    "chatglm3_6b",
+]
+
+
+def moe_archs() -> List[str]:
+    """Architectures with a routed-expert MLP (MoE expert dispatch)."""
+    return [a for a in lm_archs() if get_config(a).n_experts > 0]
+
+
 def cells(arch: str) -> Dict[str, RunShape]:
     """The assigned (shape -> RunShape) cells for one arch, with skips."""
     cfg = get_config(arch)

@@ -242,6 +242,7 @@ class DramController:
         amap: AddressMap,
         cfg: Optional[ControllerConfig] = None,
         injector: Optional["FaultInjector"] = None,
+        recorder=None,
     ):
         self.amap = amap
         self.cfg = cfg or ControllerConfig()
@@ -250,6 +251,11 @@ class DramController:
             for c in range(amap.geo.channels)
         ]
         self.now_ns = 0.0   # dispatch frontier (advances with completions)
+        #: trace recorder (:class:`repro.trace.record.TraceRecorder`, duck-
+        #: typed — only ``emit`` is used): every dispatched PUD burst /
+        #: access burst lands in the trace with its per-channel shape and
+        #: completion times.  None = no tracing overhead.
+        self.recorder = recorder
 
     @property
     def n_channels(self) -> int:
@@ -273,6 +279,12 @@ class DramController:
             if n:
                 done = max(done, self.channels[c].enqueue_pud(n, row_ns, now))
         self.now_ns = max(self.now_ns, done)
+        if self.recorder is not None:
+            self.recorder.emit(
+                "ctrl_pud",
+                rows_per_channel=counts.tolist(), row_ns=float(row_ns),
+                start=float(now), done=float(done),
+            )
         return PudDispatch(now, done, counts.tolist())
 
     def peek_pud(
@@ -314,6 +326,20 @@ class DramController:
             pairs = list(zip(bank_ids[m].tolist(), rows[m].tolist()))
             done = max(done, self.channels[c].enqueue_accesses(pairs, now))
         self.now_ns = max(self.now_ns, done)
+        if self.recorder is not None:
+            # (channel, bank, row) triples, not raw PAs: the replay executor
+            # re-queues them without needing the address map.
+            self.recorder.emit(
+                "ctrl_access",
+                channels=self.n_channels,
+                accesses=[
+                    [int(c), int(b), int(r)]
+                    for c, b, r in zip(
+                        chan.tolist(), bank_ids.tolist(), rows.tolist()
+                    )
+                ],
+                start=float(now), done=float(done),
+            )
         return done
 
     # -- compaction / migration traffic ---------------------------------------

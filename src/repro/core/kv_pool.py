@@ -87,6 +87,9 @@ class PagedKVPool:
         # seq slot -> (k_handle, token_count)
         self._seqs: Dict[int, Tuple[TileHandle, int]] = {}
         self._free_slots = list(range(cfg.max_seqs))
+        #: trace recorder (:class:`repro.trace.record.TraceRecorder`);
+        #: the serving engine wires it in — None = no tracing overhead.
+        self.trace = None
 
     # -- capacity reasoning (admission control) -------------------------------
     def blocks_for(self, n_tokens: int) -> int:
@@ -114,6 +117,8 @@ class PagedKVPool:
             self.journal.append(
                 "kv_admit", slot=slot, hid=h.hid, ntok=n_prompt_tokens
             )
+        if self.trace is not None:
+            self.trace.on_admit(slot, h.tiles, alloc=self.cfg.policy)
         return slot
 
     def fork(
@@ -159,6 +164,9 @@ class PagedKVPool:
         if ntok > len(h.tiles) * self.cfg.block_size:
             if not self.pool.extend(h, 1):
                 return False
+            if self.trace is not None:
+                contig = len(h.tiles) < 2 or h.tiles[-1] == h.tiles[-2] + 1
+                self.trace.on_extend(slot, h.tiles[-1], contig)
         self._seqs[slot] = (h, ntok)
         if self.journal is not None:
             self.journal.append("kv_append", slot=slot)
@@ -169,6 +177,8 @@ class PagedKVPool:
         self.pool.free(h)
         if self.journal is not None:
             self.journal.append("kv_release", slot=slot)
+        if self.trace is not None:
+            self.trace.on_release(slot)
         self._free_slots.append(slot)
 
     # -- maintenance ----------------------------------------------------------
@@ -223,10 +233,26 @@ class PagedKVPool:
             2 * cfg.n_layers * cfg.block_size * cfg.kv_heads * cfg.head_dim
             * jnp.dtype(cfg.dtype).itemsize
         )
-        return compact_pool(
+        report = compact_pool(
             self.pool, plan,
             tile_bytes=tile_bytes, model=model, controller=controller,
         )
+        if self.trace is not None and report is not None:
+            self.trace.on_compact(
+                [(m.src, m.dst) for m in plan.moves], report
+            )
+        return report
+
+    # -- trace helpers -----------------------------------------------------------
+    def tiles_of(self, slot: int) -> List[int]:
+        """Current tile list of a live sequence (trace emission)."""
+        return list(self._seqs[slot][0].tiles)
+
+    def block_of_token(self, slot: int) -> int:
+        """Pool block holding the sequence's latest token — the block a
+        decode-step ``write_token_kv`` just landed in."""
+        h, ntok = self._seqs[slot]
+        return h.tiles[(ntok - 1) // self.cfg.block_size]
 
     # -- device views -----------------------------------------------------------
     def block_table(self) -> np.ndarray:

@@ -90,13 +90,23 @@ __all__ = [
 ]
 
 
-OpKind = str  # "zero" | "copy" | "and" | "or" | "not"
+OpKind = str  # "zero" | "copy" | "and" | "or" | "not" | "mac"
 
-#: operands (incl. destination) per op
-N_OPERANDS: Dict[str, int] = {"zero": 1, "copy": 2, "and": 3, "or": 3, "not": 2}
+#: operands (incl. destination) per op.  ``mac`` is the arithmetic
+#: extension toward MIMDRAM/Proteus-style substrates (ROADMAP Tracegen
+#: item): a decode-time multiply-accumulate over a weight row into a
+#: co-located accumulator row — 2 operands (weight, accumulator), the
+#: scalar input vector is broadcast through the mat drivers.
+N_OPERANDS: Dict[str, int] = {
+    "zero": 1, "copy": 2, "and": 3, "or": 3, "not": 2, "mac": 2,
+}
 
-#: AAP sequences per row for each PUD op (RowClone/Ambit command counts)
-PUD_AAPS: Dict[str, int] = {"zero": 1, "copy": 2, "and": 4, "or": 4, "not": 3}
+#: AAP sequences per row for each PUD op (RowClone/Ambit command counts;
+#: ``mac`` approximates MIMDRAM's bit-serial popcount-accumulate ladder —
+#: several majority/copy rounds per element group, so 8 AAPs per row).
+PUD_AAPS: Dict[str, int] = {
+    "zero": 1, "copy": 2, "and": 4, "or": 4, "not": 3, "mac": 8,
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -113,8 +123,11 @@ class PudCostModel:
 
     def cpu_bytes_moved(self, op: OpKind, nbytes: int) -> int:
         # zero: write N; copy: read N + write N; and/or: 2 reads + 1 write;
-        # not: read + write.
-        streams = {"zero": 1, "copy": 2, "and": 3, "or": 3, "not": 2}[op]
+        # not: read + write; mac: stream the weights + read-modify-write the
+        # (vector-sized, cache-resident) accumulator ≈ read N + write N.
+        streams = {
+            "zero": 1, "copy": 2, "and": 3, "or": 3, "not": 2, "mac": 2,
+        }[op]
         return streams * nbytes
 
     def cpu_ns(self, op: OpKind, nbytes: int, nrows: int = 1) -> float:
@@ -280,6 +293,8 @@ def simulate_op(
     adaptive: bool = True,
     controller: Optional[DramController] = None,
     injector: Optional["FaultInjector"] = None,
+    recorder=None,
+    label: Optional[str] = None,
 ) -> SimResult:
     """Price one op.  ``adaptive`` (beyond-paper refinement): the PUD driver
     knows both cost models and only offloads when DRAM execution is cheaper —
@@ -299,6 +314,13 @@ def simulate_op(
     injected RowClone error rate: a faulted row's AAP time is wasted and the
     row is re-executed on the CPU — the graceful-degradation pricing the
     chaos benchmark measures.
+
+    With a ``recorder`` (:class:`repro.trace.record.TraceRecorder` — duck-
+    typed, only ``emit`` is used), the fully priced op lands in the trace as
+    one ``pud_op`` event, emitted *before* the controller dispatch so the
+    replay executor can re-run the queue-state-aware peek against
+    un-advanced controller state.  ``label`` is free-form provenance (the
+    offload model passes ``arch/allocator/weight-name``).
     """
     plan = plan_rows(op, operands, amap, injector=injector)
     region = amap.region_bytes
@@ -336,19 +358,36 @@ def simulate_op(
     if adaptive and t > t_cpu:
         t = t_cpu
         rows_per_channel = None  # driver picked the CPU: nothing dispatched
-    elif pud_rows:
-        if injector is not None:
-            # mid-flight RowClone faults: the AAP time above is already
-            # spent; each faulted row is gracefully retried on the CPU.
-            faults = injector.rowclone_faults(plan.pud_subarrays().tolist())
-            n_faulted = int(faults.sum())
-            if n_faulted:
-                plan.faulted_rows = n_faulted
-                if not cpu_rows:  # first CPU entry for this op: pay setup
-                    t += model.cpu_op_overhead_ns
-                t += model.cpu_ns(op, n_faulted * region, n_faulted)
-        if controller is not None:
-            controller.dispatch_pud(plan.pud_subarrays(), row_ns)
+    elif pud_rows and injector is not None:
+        # mid-flight RowClone faults: the AAP time above is already
+        # spent; each faulted row is gracefully retried on the CPU.
+        faults = injector.rowclone_faults(plan.pud_subarrays().tolist())
+        n_faulted = int(faults.sum())
+        if n_faulted:
+            plan.faulted_rows = n_faulted
+            if not cpu_rows:  # first CPU entry for this op: pay setup
+                t += model.cpu_op_overhead_ns
+            t += model.cpu_ns(op, n_faulted * region, n_faulted)
+    if recorder is not None:
+        # emitted before the dispatch below: replay peeks the controller
+        # queues in recorded state, then applies the ctrl_pud event.
+        recorder.emit(
+            "pud_op",
+            op=op, label=label, size=int(size), n_rows=int(plan.n_rows),
+            pud_rows=int(pud_rows), cpu_rows=int(cpu_rows),
+            cpu_bytes=int(cpu_bytes), tail_bytes=int(plan.tail_bytes),
+            region_bytes=int(region),
+            rows_per_channel=(
+                None if rows_per_channel is None
+                else [int(n) for n in rows_per_channel]
+            ),
+            ctrl=controller is not None,
+            adaptive=bool(adaptive),
+            faulted_rows=int(n_faulted),
+            t_ns=float(t), t_cpu_ns=float(t_cpu),
+        )
+    if controller is not None and rows_per_channel is not None and pud_rows:
+        controller.dispatch_pud(plan.pud_subarrays(), row_ns)
     return SimResult(
         op, size, plan.pud_fraction, t, t_cpu, rows_per_channel, n_faulted
     )

@@ -133,6 +133,7 @@ class ServeEngine:
         admission_lookahead: int = 8,
         stall_patience: int = 3,
         maintenance: Optional[MaintenanceConfig] = None,
+        trace=None,
     ):
         cfg = model.cfg
         assert pool_cfg.kv_heads == cfg.n_kv_heads and pool_cfg.head_dim == cfg.hd
@@ -182,6 +183,12 @@ class ServeEngine:
         self.compaction_passes = 0
         self.blocks_migrated = 0
         self._last_maintenance = -(10 ** 9)
+        #: tracegen recorder (:class:`repro.trace.record.TraceRecorder`):
+        #: shared with the pool so request lifecycle, prompt-KV fills,
+        #: decode-token writes, and compaction all land in one trace.
+        self.trace = trace
+        self.pool.trace = trace
+        self._step_writes: List = []   # (slot, block) token writes this step
 
     # -- submission -----------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -356,6 +363,10 @@ class ServeEngine:
         k, v = cache["layers"]["recent"]            # (L, 1, S, KV, hd)
         for li in range(cfg.n_layers):
             self.pool.write_prompt_kv(req.slot, li, k[li, 0, :S], v[li, 0, :S])
+        if self.trace is not None:
+            self.trace.on_prefill(
+                req.slot, req.rid, S, self.pool.tiles_of(req.slot)
+            )
         if not req.out:
             req.out.append(int(jnp.argmax(logits[0])))
         # account the pending token: it becomes the next decode input.
@@ -380,12 +391,25 @@ class ServeEngine:
         After the step, every registered ``step_hooks`` callable receives
         ``(engine, step_sample())`` — the open-loop load harness samples
         occupancy / queue depth / degraded-mode counters this way without
-        the engine knowing about any particular consumer."""
+        the engine knowing about any particular consumer.
+
+        The sample is taken once, *after* the step (and any watermark
+        compaction inside it) completes, and each hook gets its own
+        snapshot copy: a consumer that mutates its sample — or registers /
+        removes hooks from inside one — cannot leak an inconsistent view
+        into the other consumers mid-iteration."""
+        if self.trace is not None:
+            self._step_writes = []
+            d0 = self.tokens_decoded
         alive = self._step()
+        if self.trace is not None:
+            self.trace.on_step(
+                self.clock, self.tokens_decoded - d0, self._step_writes
+            )
         if self.step_hooks:
             sample = self.step_sample()
-            for hook in self.step_hooks:
-                hook(self, sample)
+            for hook in list(self.step_hooks):
+                hook(self, dict(sample))
         return alive
 
     def _step(self) -> bool:
@@ -468,6 +492,12 @@ class ServeEngine:
             req = self.live[slot]
             for li in range(cfg.n_layers):
                 self.pool.write_token_kv(slot, li, new_k[li, bi], new_v[li, bi])
+            if self.trace is not None:
+                # one block-granular write per decoded token (all layers'
+                # planes of that block count as the one row touch)
+                self._step_writes.append(
+                    (slot, self.pool.block_of_token(slot))
+                )
             tok = int(nxt[bi])
             self.tokens_decoded += 1
             finished = (

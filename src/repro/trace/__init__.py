@@ -1,0 +1,31 @@
+"""repro.trace — trace-driven PIM offload of decode GEMV/MoE (ISSUE 10).
+
+Three pieces, mirroring HBM-PIMulator's Tracegen design:
+
+* :mod:`repro.trace.record` — a versioned, seed-deterministic tracegen
+  recorder that hooks :class:`~repro.serve.engine.ServeEngine`,
+  :class:`~repro.core.kv_pool.PagedKVPool` and
+  :class:`~repro.core.controller.DramController` and emits a per-channel
+  op trace (row-copy bursts, AND/OR/NOT/MAC PUD ops, read/write bursts,
+  CPU fallbacks) as JSONL with a pinned schema.
+* :mod:`repro.trace.replay` — a replay executor that re-prices a trace
+  through :mod:`repro.core.pud` + :mod:`repro.core.controller` bit-exactly,
+  independent of the live engine.
+* :mod:`repro.trace.gemv` — a Tracegen-style GEMV/MoE offload model that
+  maps registry-model decode matvecs onto banks and classifies each op as
+  PUD-executable vs CPU fallback under the four allocator placements.
+
+:mod:`repro.trace.serve_trace` glues the recorder onto the fixed-seed
+serving scenarios and owns the golden-trace writer.
+"""
+from repro.trace.record import SCHEMA_VERSION, TraceRecorder, TraceSchemaError
+from repro.trace.replay import ReplayResult, parse_trace, replay_trace
+
+__all__ = [
+    "SCHEMA_VERSION",
+    "TraceRecorder",
+    "TraceSchemaError",
+    "ReplayResult",
+    "parse_trace",
+    "replay_trace",
+]

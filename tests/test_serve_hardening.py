@@ -202,3 +202,43 @@ def test_contended_run_matches_uncontended_bit_exactly(model_and_params, seed):
     assert uncontended.preemptions == 0
     assert set(out_c) == set(out_u) == {0, 1, 2}
     assert out_c == out_u
+
+
+def test_step_hooks_get_isolated_snapshots(model_and_params):
+    """Regression (ISSUE 10 satellite): each step hook gets its own copy of
+    the step sample, and hooks registered/removed from inside a hook do not
+    perturb the current iteration — a maintenance consumer that mutates its
+    sample (as the watermark bookkeeping does) must not leak an
+    inconsistent read into a sampler running in the same tick."""
+    model, params = model_and_params
+    eng = ServeEngine(model, params, _pool_cfg(model.cfg), use_kernel=False)
+
+    seen_by_b = []
+
+    def hook_a(e, sample):
+        # hostile consumer: clobbers every field, then empties its dict,
+        # and deregisters itself mid-iteration
+        for k in list(sample):
+            sample[k] = -1.0
+        sample.clear()
+        if hook_a in e.step_hooks:
+            e.step_hooks.remove(hook_a)
+
+    def hook_b(e, sample):
+        seen_by_b.append(dict(sample))
+
+    eng.step_hooks.append(hook_a)
+    eng.step_hooks.append(hook_b)
+    eng.submit(Request(rid=0, prompt=[1, 2, 3], max_new=4))
+    eng.run()
+    check_engine(eng).assert_ok()
+
+    assert seen_by_b, "second hook never ran"
+    for sample in seen_by_b:
+        # pristine values despite hook_a's clobbering in the same tick
+        assert sample, "hook saw an emptied sample"
+        assert all(v >= 0 for v in sample.values()), sample
+        assert 0.0 <= sample["used_fraction"] <= 1.0
+    # hook_a removed itself after the first step without skipping hook_b
+    assert hook_a not in eng.step_hooks
+    assert len(seen_by_b) == eng.clock

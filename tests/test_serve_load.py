@@ -180,3 +180,25 @@ def test_channel_occupancy_schema_is_pinned(model_and_params):
     assert isinstance(occ["balance"], float)
     assert len(occ["used_tiles"]) == len(occ["free_tiles"]) == occ["channels"]
     assert sum(occ["used_tiles"]) > 0        # one live sequence holds tiles
+
+
+# ---------------------------------------------------------------------------
+# opt-in full-size lane (scripts/ci.sh --full): the production-scale
+# trajectory, not the smoke shrink
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["steady", "bursty"])
+def test_full_size_scenario_trajectory(model_and_params, name):
+    """Full (non-smoke) scenario through the engine: hundreds of requests
+    per scenario (the whole registry streams ~1800 across the five), with
+    the same ledger-conservation and drain invariants as the smoke lane."""
+    sc = build_scenario(name, smoke=False)
+    eng = _engine(model_and_params, sc.pool)
+    rec = play(eng, sc.generate(), max_steps=sc.max_steps)
+    assert rec["n"] >= 10 * build_scenario(name, smoke=True).generate().__len__()
+    assert rec["conservation_ok"]
+    assert rec["submitted"] == rec["done"] + rec["rejected"] + rec["cancelled"]
+    assert not eng.queue and not eng.live
+    assert eng.pool.pool.free_tiles() == eng.pool.pool.total_tiles
+    assert rec["tokens_per_s"] > 0

@@ -1,0 +1,118 @@
+"""Golden-trace regression suite (ISSUE 10): the recorded serving trace
+of the fixed-seed ``steady`` smoke scenario is pinned byte-for-byte under
+``tests/goldens/``.
+
+Any drift in the trace schema, the event stream, or the pricing
+arithmetic (controller timings, RowClone/CPU split, SimCost totals) makes
+the regeneration differ from the golden — and the failure is *loud*: a
+unified diff of the JSONL, not just a boolean.  Deliberate changes must
+bump :data:`repro.trace.record.SCHEMA_VERSION` and regenerate via::
+
+    PYTHONPATH=src python -m repro.trace.serve_trace \
+        --write-golden tests/goldens/steady_smoke.trace.jsonl
+"""
+import difflib
+import json
+import pathlib
+
+import pytest
+
+pytestmark = pytest.mark.trace
+
+GOLDEN = pathlib.Path(__file__).parent / "goldens" / "steady_smoke.trace.jsonl"
+
+
+@pytest.fixture(scope="module")
+def golden_text() -> str:
+    return GOLDEN.read_text()
+
+
+@pytest.fixture(scope="module")
+def regenerated():
+    from repro.trace.serve_trace import record_scenario
+
+    trace, rec = record_scenario("steady", smoke=True)
+    return trace, rec
+
+
+def test_golden_regenerates_byte_identical(golden_text, regenerated):
+    """The whole point: same seeds -> same bytes, across runs and machines."""
+    trace, _ = regenerated
+    got = trace.to_jsonl()
+    if got == golden_text:
+        return
+    diff = "\n".join(difflib.unified_diff(
+        golden_text.splitlines(), got.splitlines(),
+        fromfile="tests/goldens/steady_smoke.trace.jsonl",
+        tofile="regenerated(steady, smoke)", lineterm="", n=2,
+    ))
+    pytest.fail(
+        "regenerated steady-smoke trace drifted from the golden.\n"
+        "If the change is deliberate, bump SCHEMA_VERSION and rewrite the\n"
+        "golden via `python -m repro.trace.serve_trace --write-golden ...`.\n"
+        + diff
+    )
+
+
+def test_golden_header_pins_schema_and_constants(golden_text):
+    """Header carries everything replay needs; constants are the repo's."""
+    from repro.trace.record import SCHEMA_VERSION
+
+    header = json.loads(golden_text.splitlines()[0])
+    assert header["kind"] == "header"
+    assert header["schema"] == SCHEMA_VERSION == 1
+    assert header["model"] == {
+        "aap_ns": 90.0, "pud_issue_ns": 20.0, "cpu_bw_gbs": 10.0,
+        "cpu_op_overhead_ns": 250.0, "cpu_row_touch_ns": 40.0,
+    }
+    assert header["ctrl"] == {
+        "mode_switch_ns": 120.0, "row_hit_ns": 15.0, "row_miss_ns": 50.0,
+        "cacheline_bytes": 64,
+    }
+    assert header["sim"] == {
+        "step_overhead_ns": 2000.0, "decode_token_ns": 500.0,
+        "prefill_token_ns": 150.0,
+    }
+    assert header["meta"]["scenario"] == "steady"
+    assert header["meta"]["seed"] == 901
+
+
+def test_golden_replays_bit_exact(golden_text):
+    from repro.trace.replay import parse_trace, replay_trace
+
+    res = replay_trace(parse_trace(golden_text))
+    assert res.ok, res.report()
+    assert res.totals is not None and res.totals["sim_ns"] > 0
+    assert res.recomputed["sim_ns"] == res.totals["sim_ns"]
+
+
+def test_schema_mismatch_refused(golden_text):
+    """A foreign-schema trace is rejected up front, with regeneration
+    guidance — not silently replayed against the wrong arithmetic."""
+    from repro.trace.record import TraceSchemaError
+    from repro.trace.replay import parse_trace
+
+    lines = golden_text.splitlines()
+    header = json.loads(lines[0])
+    header["schema"] = 999
+    tampered = "\n".join(
+        [json.dumps(header, sort_keys=True, separators=(",", ":"))]
+        + lines[1:]
+    )
+    with pytest.raises(TraceSchemaError, match="999"):
+        parse_trace(tampered)
+
+
+def test_pricing_drift_fails_loud(golden_text):
+    """Tampering one priced field makes replay fail and name the event."""
+    from repro.trace.replay import parse_trace, replay_trace
+
+    events = parse_trace(golden_text)
+    victim = next(e for e in events if e["kind"] == "prefill")
+    victim["done"] = victim["done"] + 1.0
+    res = replay_trace(events)
+    assert not res.ok
+    assert any(
+        f"event {victim['i']} (prefill): done" in m for m in res.mismatches
+    ), res.report()
+    assert "replay FAILED" in res.report()
